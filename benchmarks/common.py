@@ -1,0 +1,124 @@
+"""Shared benchmark machinery: the GDA query model used by every
+latency/cost table (Table 4, Fig. 5-10).
+
+A query stage moves an intermediate-data volume matrix V[i,j] (Gb)
+between DCs; its network time is the paper's bottleneck formula
+max_ij V_ij / BW_ij (Fig. 2d). A WAN-aware placement (Tetrium/Kimchi
+stand-in) chooses per-DC task fractions from ESTIMATED BWs; latency is
+then evaluated under the TRUE runtime BW — inaccurate estimates yield
+sub-optimal placements exactly as in §2.2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.global_opt import GlobalPlan, global_optimize
+from repro.wan.simulator import WanSimulator
+
+INSTANCE_USD_PER_HOUR = 0.0464 + 2 * 0.05      # t2.medium + vCPU burst
+EGRESS_USD_PER_GB = 0.09
+
+
+def stage_network_time(volume_gb: np.ndarray, bw_mbps: np.ndarray) -> float:
+    """Slowest link time in seconds (paper Fig. 2d)."""
+    off = ~np.eye(volume_gb.shape[0], dtype=bool)
+    gb = volume_gb[off]
+    bw = np.maximum(bw_mbps[off], 1e-6)
+    t = (gb * 1000.0) / bw                     # Gb -> Mb over Mbps
+    return float(t.max()) if len(t) else 0.0
+
+
+def shuffle_volumes(data_gb: np.ndarray, frac: np.ndarray) -> np.ndarray:
+    """All-to-all shuffle: DC i sends data_i * frac_j to DC j."""
+    v = np.outer(data_gb, frac)
+    np.fill_diagonal(v, 0.0)
+    return v
+
+
+def place_tasks(data_gb: np.ndarray, bw_est: np.ndarray,
+                iters: int = 200) -> np.ndarray:
+    """Greedy placement minimizing the bottleneck under estimated BW
+    (the heterogeneous-BW-aware move of Tetrium/Kimchi)."""
+    n = len(data_gb)
+    frac = np.ones(n) / n
+    best = stage_network_time(shuffle_volumes(data_gb, frac), bw_est)
+    rng = np.random.default_rng(0)
+    for _ in range(iters):
+        i, j = rng.integers(0, n, 2)
+        if i == j:
+            continue
+        delta = min(0.05, frac[i])
+        cand = frac.copy()
+        cand[i] -= delta
+        cand[j] += delta
+        t = stage_network_time(shuffle_volumes(data_gb, cand), bw_est)
+        if t < best:
+            best, frac = t, cand
+    return frac
+
+
+@dataclass
+class QueryResult:
+    latency_s: float
+    cost_usd: float
+    min_bw: float
+    net_s: float = 0.0
+
+
+def run_query(sim: WanSimulator, data_gb: np.ndarray,
+              bw_est: np.ndarray, *, conns: Optional[np.ndarray] = None,
+              cap: Optional[np.ndarray] = None,
+              compute_s: float = 120.0, n_stages: int = 2) -> QueryResult:
+    """Place with `bw_est`, execute under the simulator's TRUE runtime
+    BW with `conns` parallel connections (default single)."""
+    n = sim.N
+    frac = place_tasks(data_gb, bw_est)
+    c = np.ones((n, n)) if conns is None else np.asarray(conns, float)
+    true_bw = sim.measure_simultaneous(c, cap=cap)
+    vol = shuffle_volumes(data_gb, frac)
+    t_net = n_stages * stage_network_time(vol, true_bw)
+    latency = compute_s + t_net
+    egress_gb = float(vol.sum()) / 8.0 * n_stages      # Gb -> GB
+    cost = latency / 3600.0 * n * INSTANCE_USD_PER_HOUR \
+        + egress_gb * EGRESS_USD_PER_GB
+    off = ~np.eye(n, dtype=bool)
+    return QueryResult(latency, cost, float(true_bw[off].min()), t_net)
+
+
+def wanify_inputs(sim: WanSimulator, predictor=None, M: int = 8,
+                  w_s=None) -> Tuple[np.ndarray, GlobalPlan]:
+    """Predicted runtime BW (RF if given, else true runtime + noise) and
+    the global plan."""
+    if predictor is not None:
+        from repro.wan.monitor import SnapshotMonitor
+        _, raw = SnapshotMonitor(sim).capture()
+        pred = predictor.predict_matrix(
+            sim.N, raw["snapshot_bw"], raw["mem_util"], raw["cpu_load"],
+            raw["retrans"], raw["dist"])
+    else:
+        pred = sim.measure_runtime()
+    plan = global_optimize(pred, M=M, w_s=w_s)
+    return pred, plan
+
+
+# The paper's TPC-DS query classes: (name, total intermediate Gb,
+# compute seconds) — light 82, average 95/11, heavy 78 (§5.2)
+TPCDS = {
+    "q82": (6.0, 180.0),
+    "q95": (60.0, 240.0),
+    "q11": (90.0, 300.0),
+    "q78": (160.0, 420.0),
+}
+
+
+def query_volumes(total_gb: float, n: int, seed: int = 0,
+                  skew: Optional[np.ndarray] = None) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    d = rng.dirichlet(np.ones(n) * 3) * total_gb
+    if skew is not None:
+        d = d * skew
+        d = d / d.sum() * total_gb
+    return d

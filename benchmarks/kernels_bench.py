@@ -1,0 +1,84 @@
+"""Micro-benchmarks of the Pallas kernels (interpret mode on CPU — the
+numbers are correctness-path timings, not TPU perf) and the wansync
+schedule's analytic wire model."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, *args, reps=5) -> float:
+    fn(*args)                                  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels() -> List[Row]:
+    from repro.kernels import ops
+    rows = []
+    x = jax.random.normal(jax.random.key(0), (1024, 1024), jnp.float32)
+    us = _timeit(lambda v: ops.quantize(v, bits=8), x)
+    rows.append(("kernel.quantize_1Mx4B_us", us,
+                 f"{x.nbytes / (us / 1e6) / 1e9:.2f} GB/s interpret"))
+    q, s = ops.quantize(x, bits=8)
+    us = _timeit(lambda a, b: ops.dequantize(a, b), q, s)
+    rows.append(("kernel.dequantize_us", us, ""))
+
+    from repro.core.forest import RandomForest
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 6)).astype(np.float32)
+    y = X[:, 0].astype(np.float32)
+    rf = RandomForest(n_trees=100, depth=10).fit(X, y)
+    f, t, l = [jnp.asarray(a) for a in rf.packed()]
+    Xt = jnp.asarray(rng.normal(size=(128, 6)).astype(np.float32))
+    us = _timeit(lambda v: ops.rf_predict(f, t, l, v, depth=10), Xt)
+    rows.append(("kernel.rf_predict_128x100trees_us", us, ""))
+
+    B, nC, Q, H, P, N = 1, 2, 64, 8, 32, 32
+    ks = jax.random.split(jax.random.key(1), 4)
+    xq = jax.random.normal(ks[0], (B, nC, Q, H, P)) * 0.1
+    Bq = jax.random.normal(ks[1], (B, nC, Q, N)) * 0.3
+    Cq = jax.random.normal(ks[2], (B, nC, Q, N)) * 0.3
+    da = -jnp.abs(jax.random.normal(ks[3], (B, nC, H, Q))) * 0.1
+    us = _timeit(lambda a, b, c, d: ops.ssd_chunk(a, b, c, d), xq, Bq, Cq, da)
+    rows.append(("kernel.ssd_chunk_us", us, ""))
+    return rows
+
+
+def bench_wansync_model() -> List[Row]:
+    """Analytic cross-pod sync time on the calibrated WAN: bytes on each
+    offset class / link BW, with and without the WANify plan."""
+    from repro.core.plan import WanPlan
+    from repro.core.wansync import offset_schedule
+    from repro.core.global_opt import global_optimize
+    from repro.wan.simulator import WanSimulator
+    rows = []
+    grad_gb = 8 * 8                       # 8 GB of grads in Gb
+    for pods in (2, 4, 8):
+        sim = WanSimulator(seed=3)
+        pred = sim.measure_runtime()[:pods, :pods]
+        plan = WanPlan.from_global(global_optimize(pred, M=8))
+        base_plan = WanPlan.uniform(pods)
+        for name, p in [("wanify", plan), ("uniform", base_plan)]:
+            conns = np.array(p.conns, float)
+            bw = sim.measure_simultaneous(
+                np.pad(conns, (0, 8 - pods)))[:pods, :pods]
+            off = ~np.eye(pods, dtype=bool)
+            sched = offset_schedule(p)
+            t = 0.0
+            for ph in sched:
+                o = ph["offset"]
+                bits = ph["bits"] if name == "wanify" else 32
+                pair_bw = min(bw[i][(i + o) % pods] for i in range(pods))
+                t += (grad_gb / pods) * (bits / 32.0) * 1000.0 / max(pair_bw, 1)
+            rows.append((f"wansync.p{pods}.{name}_s", t,
+                         f"min_link={bw[off].min():.0f}Mbps"))
+    return rows

@@ -1,0 +1,270 @@
+"""One benchmark per paper table/figure. Each returns CSV rows
+(name, value, derived) consumed by benchmarks/run.py."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import (TPCDS, QueryResult, query_volumes, run_query,
+                               wanify_inputs)
+from repro.core.global_opt import global_optimize
+from repro.core.local_opt import AimdAgent, run_agents
+from repro.core.plan import pick_bits
+from repro.wan.monitor import annual_costs
+from repro.wan.simulator import WanSimulator
+
+Row = Tuple[str, float, str]
+OFF8 = ~np.eye(8, dtype=bool)
+
+
+def bench_table1() -> List[Row]:
+    """Static-independent vs runtime BW gaps (paper: 18 significant)."""
+    sim = WanSimulator(seed=1)
+    si = sim.measure_static_independent()
+    sim.advance(10)
+    rt = sim.measure_runtime()
+    gaps = np.abs(rt - si)[OFF8]
+    b = [int(((gaps > 100) & (gaps <= 200)).sum()),
+         int(((gaps > 200) & (gaps <= 250)).sum()),
+         int((gaps > 250).sum())]
+    return [("table1.significant_pairs", float(sum(b)),
+             f"buckets(100-200/200-250/>250)={b[0]}/{b[1]}/{b[2]} paper=18")]
+
+
+def bench_table2() -> List[Row]:
+    rows = []
+    for n in (4, 6, 8):
+        c = annual_costs(n)
+        rows.append((f"table2.savings_n{n}", c["savings_frac"] * 100,
+                     f"monitor=${c['runtime_monitoring']:.0f} "
+                     f"pred=${c['prediction']:.0f} paper~96%"))
+    return rows
+
+
+def bench_fig2() -> List[Row]:
+    """3-DC heterogeneous connections demo (paper: 2.1x min BW)."""
+    sim = WanSimulator(regions=["us-east", "us-west", "ap-se"], seed=2)
+    off = ~np.eye(3, dtype=bool)
+    u1 = sim.measure_simultaneous(np.ones((3, 3)))
+    u8 = sim.measure_simultaneous(np.full((3, 3), 8.0))
+    het = np.array([[0, 2, 11], [2, 0, 13], [11, 13, 0]], float)  # Fig 2c
+    hb = sim.measure_simultaneous(het)
+    # Fig 2d network latency: 3 Gb to/from DC3, 9 Gb between DC1-DC2
+    vol = np.array([[0, 9, 3], [9, 0, 3], [3, 3, 0]], float)
+    t = lambda bw: float((vol[off] * 1000 / np.maximum(bw[off], 1e-6)).max())
+    return [
+        ("fig2.min_bw_single", float(u1[off].min()), "1 conn per link"),
+        ("fig2.min_bw_uniform8", float(u8[off].min()), "paper: ~120 Mbps"),
+        ("fig2.min_bw_heterogeneous", float(hb[off].min()),
+         f"gain={hb[off].min() / u8[off].min():.2f}x paper=2.1x"),
+        ("fig2.net_latency_uniform8_s", t(u8), ""),
+        ("fig2.net_latency_het_s", t(hb),
+         f"speedup={t(u8) / t(hb):.2f}x"),
+    ]
+
+
+def bench_table4() -> List[Row]:
+    """Latency/cost gains from simultaneous/predicted BWs vs
+    static-independent placement (paper: up to ~16-18% latency)."""
+    from repro.core.predictor import BwPredictor
+    from repro.wan.dataset import train_default_forest
+    rf, _, _ = train_default_forest(n_samples=120, n_trees=40)
+    rows = []
+    for q, (gb, comp) in TPCDS.items():
+        sim = WanSimulator(seed=hash(q) % 1000)
+        sim.advance(5)
+        data = query_volumes(gb, 8, seed=3)
+        si = sim.measure_static_independent()
+        base = run_query(sim, data, si, compute_s=comp)
+        simu = run_query(sim, data, sim.measure_runtime(), compute_s=comp)
+        pred, _ = wanify_inputs(sim, BwPredictor(rf))
+        prq = run_query(sim, data, pred, compute_s=comp)
+        rows.append((f"table4.{q}.perf_simultaneous_pct",
+                     (1 - simu.latency_s / base.latency_s) * 100,
+                     f"cost {(1 - simu.cost_usd / base.cost_usd) * 100:.1f}%"))
+        rows.append((f"table4.{q}.perf_predicted_pct",
+                     (1 - prq.latency_s / base.latency_s) * 100,
+                     f"cost {(1 - prq.cost_usd / base.cost_usd) * 100:.1f}% "
+                     f"paper<=18%"))
+    return rows
+
+
+def bench_fig5() -> List[Row]:
+    """TeraSort PDT variants: vanilla / uniform-P / Dynamic / TC."""
+    sim = WanSimulator(seed=4)
+    data = np.full(8, 100.0 / 8)      # TeraSort: uniform all-to-all, 100 GB
+    pred, plan = wanify_inputs(sim)
+    rows = []
+    variants = {
+        "vanilla_1conn": dict(bw=pred, conns=None, cap=None),
+        "wanify_P_uniform8": dict(bw=pred, conns=np.full((8, 8), 8.0),
+                                  cap=None),
+        "wanify_dynamic": dict(bw=pred, conns=plan.max_cons.astype(float),
+                               cap=None),
+        "wanify_TC": dict(bw=pred, conns=plan.max_cons.astype(float),
+                          cap=plan.throttle),
+    }
+    for name, kw in variants.items():
+        r = run_query(sim, data, kw["bw"], conns=kw["conns"], cap=kw["cap"],
+                      compute_s=600.0, n_stages=3)
+        rows.append((f"fig5.{name}.latency_s", r.latency_s,
+                     f"cost=${r.cost_usd:.2f} min_bw={r.min_bw:.0f}Mbps"))
+    return rows
+
+
+def bench_fig6() -> List[Row]:
+    """Shuffle-size sweep: WANify vs single connection."""
+    rows = []
+    for mb in (2.06, 3.63, 7.4, 14.8, 29.6, 59.2):
+        sim = WanSimulator(seed=6)
+        data = query_volumes(mb * 8 / 1000.0, 8, seed=6)   # MB -> Gb scale
+        pred, plan = wanify_inputs(sim)
+        base = run_query(sim, data, pred, compute_s=60.0)
+        wan = run_query(sim, data, pred, conns=plan.max_cons.astype(float),
+                        cap=plan.throttle, compute_s=60.0)
+        rows.append((f"fig6.size_{mb}MB.net_speedup",
+                     max(base.net_s, 1e-9) / max(wan.net_s, 1e-9),
+                     f"minbw {base.min_bw:.0f}->{wan.min_bw:.0f} "
+                     f"(gains grow with shuffle size, paper Fig 6)"))
+    return rows
+
+
+def bench_fig8() -> List[Row]:
+    """Ablation: Global-only / Local-only / full WANify + error injection."""
+    sim = WanSimulator(seed=8)
+    data = query_volumes(160.0, 8, seed=8)
+    pred, plan = wanify_inputs(sim)
+    vanilla = run_query(sim, data, sim.measure_static_independent(),
+                        compute_s=420.0)
+    glob = run_query(sim, data, pred, conns=plan.max_cons.astype(float),
+                     compute_s=420.0)
+    # local-only: static 1-8 window with solo-BW priors; AIMD fine-tunes
+    si = sim.measure_static_independent()
+    from repro.core.global_opt import GlobalPlan
+    ones = np.ones((8, 8), np.int64)
+    static_plan = GlobalPlan(
+        pred_bw=si, dc_rel=ones, min_cons=ones,
+        max_cons=np.where(np.eye(8, dtype=bool), 1, 8).astype(np.int64),
+        min_bw=si, max_bw=si * 8, throttle=np.full((8, 8), np.inf))
+    conns_local, _ = run_agents(
+        static_plan, lambda c: sim.measure_snapshot(c), steps=5)
+    loc = run_query(sim, data, pred, conns=conns_local.astype(float),
+                    compute_s=420.0)
+    full = run_query(sim, data, pred, conns=plan.max_cons.astype(float),
+                     cap=plan.throttle, compute_s=420.0)
+    err_bw = pred + np.random.default_rng(0).choice(
+        [-100.0, 100.0], size=pred.shape)
+    err = run_query(sim, data, err_bw, conns=plan.max_cons.astype(float),
+                    cap=plan.throttle, compute_s=420.0)
+    rows = []
+    for name, r in [("global_only", glob), ("local_only", loc),
+                    ("full", full)]:
+        rows.append((f"fig8.{name}.latency_gain_pct",
+                     (1 - r.latency_s / vanilla.latency_s) * 100,
+                     f"min_bw={r.min_bw:.0f} paper: 16/11/23%"))
+    rows.append(("fig8.err100.latency_penalty_pct",
+                 (err.latency_s / full.latency_s - 1) * 100,
+                 "paper: ~18% worse with +-100Mbps errors"))
+    return rows
+
+
+def bench_fig9() -> List[Row]:
+    """AIMD dynamics: target-BW tracking SD + 20% error injection."""
+    sim = WanSimulator(seed=9)
+    pred, plan = wanify_inputs(sim)
+    agent = AimdAgent.from_plan(plan, 0)
+    sds, sig = [], 0
+    rng = np.random.default_rng(9)
+    for epoch in range(20):
+        sim.advance()
+        mon = sim.measure_snapshot(plan.max_cons.astype(float))[0]
+        agent.step(mon)
+        sds.append(np.std(agent.target_bw[1:]))
+        noisy = agent.target_bw * (1 + rng.uniform(-0.2, 0.2,
+                                                   len(agent.target_bw)))
+        sig += int((np.abs(noisy - mon)[1:] > 100).sum() >
+                   (np.abs(agent.target_bw - mon)[1:] > 100).sum())
+    return [("fig9.mean_target_sd", float(np.mean(sds)),
+             f"epochs=20 sig_worse_with_20pct_err={sig}")]
+
+
+def bench_fig10() -> List[Row]:
+    """Skewed input data: w_s-aware vs skew-unaware (paper: 7-26%)."""
+    sim = WanSimulator(seed=10)
+    skew = np.array([3.0, 2.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0])
+    data = query_volumes(4.8, 8, seed=10, skew=skew)   # 600 MB wordcount
+    pred, plan_ns = wanify_inputs(sim)
+    _, plan_ws = wanify_inputs(sim, w_s=skew)
+    base = run_query(sim, data, pred, compute_s=90.0)
+    unif = run_query(sim, data, pred, conns=np.full((8, 8), 8.0),
+                     compute_s=90.0)
+    wns = run_query(sim, data, pred, conns=plan_ns.max_cons.astype(float),
+                    cap=plan_ns.throttle, compute_s=90.0)
+    ws = run_query(sim, data, pred, conns=plan_ws.max_cons.astype(float),
+                   cap=plan_ws.throttle, compute_s=90.0)
+    g = lambda a, b: (1 - max(a.net_s, 1e-9) / max(b.net_s, 1e-9)) * 100
+    return [
+        ("fig10.net_gain_vs_single_pct", g(ws, base), "paper: 26.5% (total)"),
+        ("fig10.net_gain_vs_uniform_pct", g(ws, unif), "paper: 20.3% (total)"),
+        ("fig10.net_gain_vs_noskew_pct", g(ws, wns), "paper: 7.1% (total)"),
+    ]
+
+
+def bench_fig11() -> List[Row]:
+    """Prediction accuracy vs cluster size and heterogeneous VMs."""
+    from repro.core.predictor import BwPredictor
+    from repro.wan.dataset import train_default_forest
+    from repro.wan.monitor import SnapshotMonitor
+    rf, acc, r2 = train_default_forest(n_samples=150, n_trees=50)
+    rows = [("fig11.train_acc_pct", acc * 100, "paper: 98.51%"),
+            ("fig11.holdout_r2", r2, "")]
+    for n in (4, 6, 8):
+        sim = WanSimulator(regions=WanSimulator().regions[:n], seed=20 + n)
+        si = sim.measure_static_independent()
+        sim.advance(10)
+        _, raw = SnapshotMonitor(sim).capture()
+        pred = BwPredictor(rf).predict_matrix(
+            n, raw["snapshot_bw"], raw["mem_util"], raw["cpu_load"],
+            raw["retrans"], raw["dist"])
+        truth = sim.measure_runtime()
+        off = ~np.eye(n, dtype=bool)
+        rows.append((f"fig11.n{n}.sig_errors_static",
+                     float((np.abs(si - truth)[off] > 100).sum()), ""))
+        rows.append((f"fig11.n{n}.sig_errors_predicted",
+                     float((np.abs(pred - truth)[off] > 100).sum()),
+                     "predicted < static expected"))
+    return rows
+
+
+def bench_fig4_ml() -> List[Row]:
+    """BW-aware gradient quantization (SAGQ-family): training-time model
+    time = compute + grad_bytes(bits)/min_BW per epoch."""
+    sim = WanSimulator(seed=12)
+    grads_gb = 0.44 * 8                    # ~55M-param model f32, in Gb
+    epochs, comp = 10, 80.0
+    pred, plan = wanify_inputs(sim)
+    si = sim.measure_static_independent()
+    off = OFF8
+
+    def t_train(bw_matrix, bits, conns=None, cap=None):
+        true = sim.measure_simultaneous(
+            np.ones((8, 8)) if conns is None else conns, cap=cap)
+        eff = float(true[off].min())
+        per_epoch = comp + grads_gb * bits / 32.0 * 1000.0 / eff
+        return epochs * per_epoch
+
+    noq = t_train(si, 32)
+    sagq = t_train(si, pick_bits(float(si[off].min())))
+    predq = t_train(pred, pick_bits(float(pred[off].min())))
+    wq = t_train(pred, pick_bits(float(pred[off].min())),
+                 conns=plan.max_cons.astype(float), cap=plan.throttle)
+    return [
+        ("fig4.NoQ_s", noq, ""),
+        ("fig4.SAGQ_s", sagq, f"gain={(1 - sagq / noq) * 100:.0f}% paper~22%"),
+        ("fig4.PredQ_s", predq,
+         f"gain_vs_SAGQ={(1 - predq / sagq) * 100:.0f}% paper~13-14%"),
+        ("fig4.WQ_s", wq,
+         f"gain_vs_SAGQ={(1 - wq / sagq) * 100:.0f}% paper~26%"),
+    ]

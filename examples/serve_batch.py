@@ -1,0 +1,72 @@
+"""Batched serving example: prefill + decode with KV caches on a small
+Qwen3-family model, plus WANify-scheduled KV-cache migration between a
+prefill pod and decode pods (disaggregated serving).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.core.plan import WanPlan
+from repro.models import registry
+from repro.serve.engine import Engine, Request, ServeConfig, kv_migrate
+
+
+def main():
+    cfg = reduced(get_config("qwen3-4b"))
+    params = registry.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(batch=4, s_max=128, tp=1))
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab,
+                                        int(rng.integers(4, 24))
+                                        ).astype(np.int32),
+                    max_new=16)
+            for i in range(8)]
+    t0 = time.perf_counter()
+    out = eng.serve(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"[serve] {len(reqs)} requests -> {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s)")
+    for rid in sorted(out)[:3]:
+        print(f"[serve] req {rid}: {out[rid][:8]} ...")
+
+    # ---- disaggregated serving: migrate the prefill KV cache across
+    # pods over the WANify-scheduled links (chunked + int8 wire) --------
+    print("[serve] KV migration across 2 pods (WANify schedule) ...")
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan = WanPlan.uniform(2, conns=4, bits=8)
+    cache = jax.tree.map(jnp.asarray, eng.cache)
+
+    def migrate(c):
+        return kv_migrate(c, plan, src_pod=0, compress=True)
+
+    sm = jax.shard_map(migrate, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                       axis_names={"pod"}, check_vma=False)
+    with jax.set_mesh(mesh):
+        moved = jax.jit(sm)(cache)
+    ok = jax.tree.all(jax.tree.map(
+        lambda a, b: bool(jnp.allclose(a.astype(jnp.float32),
+                                       b.astype(jnp.float32),
+                                       atol=0.1, rtol=0.1)), cache, moved))
+    n_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+    print(f"[serve] migrated {n_bytes / 2 ** 20:.1f} MiB of KV cache, "
+          f"int8 wire, roundtrip-consistent: {ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Sharded checkpointing with manifest + elastic resharding.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        {step, leaf paths, shapes, dtypes, done}
+           shard_<i>.npz        flattened leaves (chunked by size)
+
+Writes are atomic (tmp dir + rename) so a crash mid-write never corrupts
+the restore point; `latest_step` only returns manifests marked done —
+that is the restart contract for node failures. Elastic rescale: params
+are stored UNSHARDED (gathered), so a restart may use any mesh/pod count
+— the WANify RF covers the new cluster size (paper §3.3.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SHARD_BYTES = 512 << 20
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = [(jax.tree_util.keystr(path), np.asarray(leaf))
+             for path, leaf in flat]
+    return items, treedef
+
+
+# npz cannot serialize ml_dtypes (bfloat16 etc.) — store raw uint bytes
+# plus the dtype name in the manifest.
+def _encode(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    name = arr.dtype.name
+    if name == "bfloat16":
+        return arr.view(np.uint16), name
+    if name.startswith("float8"):
+        return arr.view(np.uint8), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, name: str) -> np.ndarray:
+    if name == arr.dtype.name:
+        return arr
+    import ml_dtypes
+    return arr.view(np.dtype(getattr(ml_dtypes, name)))
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, async_: bool = False
+         ) -> Optional[threading.Thread]:
+    """Atomic checkpoint write; async_=True returns the writer thread
+    (overlaps the next train steps — fault-tolerance without stalls)."""
+    items, _ = _flatten(tree)
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+        try:
+            shards, cur, cur_bytes = [], {}, 0
+            dtypes = {}
+            for name, arr in items:
+                enc, dt = _encode(arr)
+                dtypes[name] = dt
+                cur[name] = enc
+                cur_bytes += arr.nbytes
+                if cur_bytes >= _SHARD_BYTES:
+                    shards.append(cur)
+                    cur, cur_bytes = {}, 0
+            if cur:
+                shards.append(cur)
+            names = []
+            for i, sh in enumerate(shards):
+                np.savez(os.path.join(tmp, f"shard_{i}.npz"), **sh)
+                names.append(f"shard_{i}.npz")
+            manifest = {
+                "step": step,
+                "shards": names,
+                "leaves": [n for n, _ in items],
+                "dtypes": dtypes,
+                "done": True,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_"):
+            mf = os.path.join(ckpt_dir, d, "manifest.json")
+            if os.path.exists(mf):
+                try:
+                    with open(mf) as f:
+                        m = json.load(f)
+                    if m.get("done"):
+                        steps.append(m["step"])
+                except (json.JSONDecodeError, KeyError):
+                    continue
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of `tree_like`; `shardings` (optional
+    pytree of NamedSharding) places leaves for the CURRENT mesh — this is
+    the elastic-rescale path (checkpoint is mesh-agnostic)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data: Dict[str, np.ndarray] = {}
+    dtypes = manifest.get("dtypes", {})
+    for sh in manifest["shards"]:
+        with np.load(os.path.join(d, sh)) as z:
+            for k in z.files:
+                data[k] = _decode(z[k], dtypes.get(k, z[k].dtype.name))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_leaves(shardings)
+    out = []
+    for i, (path, like) in enumerate(flat):
+        key = jax.tree_util.keystr(path)
+        arr = data[key]
+        if hasattr(like, "dtype") and arr.dtype != like.dtype:
+            arr = arr.astype(like.dtype)
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

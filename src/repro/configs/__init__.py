@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, reduced  # noqa: F401
+
+_ARCH_MODULES = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,35 @@
+"""DeepSeek-V2 236B — MoE with Multi-head Latent Attention.
+
+60L d_model=5120 128H (MLA kv_lora=512) expert d_ff=1536 vocab=102400,
+2 shared + 160 routed experts, top-6. [arXiv:2405.04434; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,                      # dense FFN for the first (non-MoE) layer
+    vocab=102400,
+    head_dim=192,                    # qk_nope(128) + qk_rope(64)
+    rope_theta=10000.0,
+    moe=MoEConfig(
+        n_experts=160,
+        top_k=6,
+        d_ff_expert=1536,
+        n_shared_experts=2,
+        first_dense_layers=1,
+        capacity_factor=1.25,
+    ),
+    mla=MLAConfig(
+        kv_lora_rank=512,
+        q_lora_rank=1536,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    source="arXiv:2405.04434; hf",
+)

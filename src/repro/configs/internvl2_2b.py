@@ -1,0 +1,28 @@
+"""InternVL2-2B — InternViT (STUB frontend) + InternLM2 backbone.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553. The vision tower
+is a stub: input_specs() provides precomputed patch embeddings already
+projected into the LM embedding space. [arXiv:2404.16821; hf]
+"""
+from repro.configs.base import ModelConfig, EncoderConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=92553,
+    rope_theta=1000000.0,
+    encoder=EncoderConfig(
+        n_layers=0,              # stubbed: no vision tower compute
+        d_model=2048,
+        n_heads=0,
+        d_ff=0,
+        source_len=256,          # 256 patch embeddings per image
+        frontend="stub",
+    ),
+    source="arXiv:2404.16821; hf",
+)

@@ -1,0 +1,28 @@
+"""Whisper-medium — encoder-decoder; conv audio frontend is a STUB
+(input_specs provides precomputed frame embeddings).
+
+24L(enc)+24L(dec) d_model=1024 16H d_ff=4096 vocab=51865.
+[arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ModelConfig, EncoderConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-medium",
+    family="audio",
+    n_layers=24,                 # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    rope_theta=0.0,              # whisper uses learned/sinusoidal positions
+    encoder=EncoderConfig(
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        d_ff=4096,
+        source_len=1500,         # 30 s of audio after conv frontend
+        frontend="stub",
+    ),
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,102 @@
+"""Static global optimization (paper §3.2.1, Eq. 2-3).
+
+Converts predicted runtime BWs into an optimal RANGE of heterogeneous
+connection counts per DC pair — weak/distant links get more parallel
+connections from each DC's limited per-host budget M; achievable BW is
+modelled as (predicted single-connection BW x connections), which the
+paper validates empirically ("runtime BW grows linearly with the
+connections").
+
+Paper worked example (tested in tests/test_global_opt.py):
+  DC_rel={1,2,3;2,1,3;3,3,1}, M=8 -> minCons all ones,
+  maxCons (formula, before diagonal override) = {3,6,8;6,3,8;8,8,3}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.relations import infer_dc_relations
+
+
+@dataclass
+class GlobalPlan:
+    pred_bw: np.ndarray        # [N,N] predicted runtime BW (Mbps)
+    dc_rel: np.ndarray         # [N,N] closeness indices
+    min_cons: np.ndarray       # [N,N] int
+    max_cons: np.ndarray       # [N,N] int
+    min_bw: np.ndarray         # [N,N] achievable @ min_cons
+    max_bw: np.ndarray         # [N,N] achievable @ max_cons
+    throttle: np.ndarray       # [N,N] per-link BW cap (inf = uncapped)
+
+    @property
+    def n(self) -> int:
+        return self.pred_bw.shape[0]
+
+
+def _pair_weights(N: int, w_s: Optional[np.ndarray]) -> np.ndarray:
+    """Skew weights (§3.3.1): per-DC data-volume weights -> pair weights,
+    normalized to mean 1 so the total connection budget is preserved."""
+    if w_s is None:
+        return np.ones((N, N))
+    w = np.asarray(w_s, np.float64)
+    pair = np.maximum(w[:, None], w[None, :])
+    off = ~np.eye(N, dtype=bool)
+    pair = pair / pair[off].mean()
+    return pair
+
+
+def _refactor(N: int, r_vec: Optional[np.ndarray]) -> np.ndarray:
+    """Provider/VM heterogeneity (§3.3.3): per-DC factors -> pairwise
+    geometric-mean matrix (default all ones)."""
+    if r_vec is None:
+        return np.ones((N, N))
+    r = np.asarray(r_vec, np.float64)
+    if r.ndim == 2:
+        return r
+    return np.sqrt(r[:, None] * r[None, :])
+
+
+def global_optimize(pred_bw: np.ndarray, *, M: int = 8, D: float = 100.0,
+                    w_s: Optional[np.ndarray] = None,
+                    r_vec: Optional[np.ndarray] = None,
+                    throttle_enabled: bool = True,
+                    dc_rel: Optional[np.ndarray] = None) -> GlobalPlan:
+    """pred_bw: [N,N] predicted runtime BW; M: per-host max parallel
+    connections; D: min significant BW difference (Algorithm 1 input)."""
+    bw = np.asarray(pred_bw, np.float64)
+    N = bw.shape[0]
+    rel = infer_dc_relations(bw, D) if dc_rel is None else np.asarray(dc_rel)
+    ws = _pair_weights(N, w_s)
+    rv = _refactor(N, r_vec)
+
+    # Eq. 2
+    sum_all = float(rel.sum() - N)                 # skip closeness-1 diagonal
+    max_r = rel.max(axis=1).astype(np.float64)     # row-wise maxima
+
+    # Eq. 3
+    min_candidate = np.floor(rel / sum_all * (M - 1))
+    min_cons = np.maximum(min_candidate, 1.0) * ws
+    max_cons = np.ceil(M * rel / max_r[:, None]) * ws
+    np.fill_diagonal(min_cons, 1.0)
+    np.fill_diagonal(max_cons, 1.0)                # single conn within a DC
+    min_cons = np.clip(np.rint(min_cons), 1, 2 * M).astype(np.int64)
+    max_cons = np.clip(np.rint(max_cons), 1, 2 * M).astype(np.int64)
+    max_cons = np.maximum(max_cons, min_cons)
+
+    min_bw = bw * min_cons * rv
+    max_bw = bw * max_cons * rv
+
+    # Throttling (§3.2.2): cap BW-rich destinations at the row mean of
+    # achievable BW so distant pairs can use the shared NIC capacity.
+    throttle = np.full((N, N), np.inf)
+    if throttle_enabled and N > 1:
+        off = ~np.eye(N, dtype=bool)
+        for i in range(N):
+            T = max_bw[i][off[i]].mean()
+            rich = max_bw[i] > T
+            rich[i] = False
+            throttle[i][rich] = T
+    return GlobalPlan(bw, rel, min_cons, max_cons, min_bw, max_bw, throttle)

@@ -1,0 +1,91 @@
+"""WanPlan — the bridge from the paper's connection matrices to the TPU
+cross-pod collective schedule, plus the Eq. 1 monitoring cost model.
+
+The plan carries, per pod-pair (the "DC pair"), the heterogeneous stream
+multiplicity (the "parallel connections") and the compression bits
+chosen from predicted link bandwidth (SAGQ-style, §5.6). wansync.py
+consumes `ring_chunks` to build the chunked ppermute schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.global_opt import GlobalPlan
+
+
+@dataclass(frozen=True)
+class WanPlan:
+    n_pods: int
+    conns: Tuple[Tuple[int, ...], ...]      # [P,P] stream multiplicity
+    pred_bw: Tuple[Tuple[float, ...], ...]  # [P,P] Mbps (predicted runtime)
+    compress_bits: Tuple[int, ...]          # per ring-hop quantization bits
+    # ring hop i sends pod i -> pod (i+1) % P
+
+    @classmethod
+    def from_global(cls, plan: GlobalPlan, *, use_max: bool = True,
+                    bits_policy: Optional[dict] = None) -> "WanPlan":
+        cons = plan.max_cons if use_max else plan.min_cons
+        P = plan.n
+        bits = []
+        for i in range(P):
+            j = (i + 1) % P
+            bits.append(pick_bits(plan.pred_bw[i][j], bits_policy))
+        return cls(
+            n_pods=P,
+            conns=tuple(tuple(int(v) for v in row) for row in cons),
+            pred_bw=tuple(tuple(float(v) for v in row) for row in plan.pred_bw),
+            compress_bits=tuple(bits),
+        )
+
+    @classmethod
+    def uniform(cls, n_pods: int, conns: int = 1, bits: int = 32) -> "WanPlan":
+        """Paper baseline: single connection (or uniform-k), no compression."""
+        c = tuple(tuple(conns if i != j else 1 for j in range(n_pods))
+                  for i in range(n_pods))
+        bw = tuple(tuple(1000.0 for _ in range(n_pods)) for _ in range(n_pods))
+        return cls(n_pods, c, bw, tuple(bits for _ in range(n_pods)))
+
+    # ------------------------------------------------------------------
+    def ring_chunks(self) -> List[int]:
+        """Stream multiplicity per ring hop (pod i -> i+1). This is the
+        WANify heterogeneous-connections knob: more chunks on weak hops
+        => more in-flight pipelined transfers on that link."""
+        P = self.n_pods
+        return [max(1, self.conns[i][(i + 1) % P]) for i in range(P)]
+
+    def max_ring_chunks(self) -> int:
+        return max(self.ring_chunks()) if self.n_pods > 1 else 1
+
+    def signature(self) -> Tuple:
+        """Hashable identity for jit-cache keying when the controller
+        re-plans (connection counts are compile-time constants)."""
+        return (self.n_pods, self.conns, self.compress_bits)
+
+
+def pick_bits(link_bw_mbps: float, policy: Optional[dict] = None) -> int:
+    """BW-aware gradient-compression bits (SAGQ analogue): weaker link =>
+    fewer bits. Thresholds in Mbps."""
+    pol = policy or {200.0: 8, 600.0: 16, float("inf"): 32}
+    for thr in sorted(pol):
+        if link_bw_mbps <= thr:
+            return pol[thr]
+    return 32
+
+
+# ----------------------------------------------------------------------
+# Eq. 1 — annual monitoring cost:  O x N x (x*y + z)
+# ----------------------------------------------------------------------
+def monitoring_cost(O: float, N: int, x: float, y: float, z: float) -> float:
+    """O: occurrences/year, N: nodes, x: $/instance-second,
+    y: seconds/measurement, z: $/instance network cost per measurement."""
+    return O * N * (x * y + z)
+
+
+def prediction_cost(O: float, N: int, x: float, z_snapshot: float,
+                    train_cost: float = 0.0) -> float:
+    """Snapshot-based prediction: y shrinks to ~1 s and z to the snapshot
+    traffic; training is a one-off amortized cost."""
+    return O * N * (x * 1.0 + z_snapshot) + train_cost

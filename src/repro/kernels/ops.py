@@ -1,0 +1,41 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels run in interpret mode (the TPU lowering is
+the target; interpret executes the same kernel body for correctness).
+Set REPRO_PALLAS_INTERPRET=0 on real TPUs.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quantize as _q
+from repro.kernels import rf_predict as _rf
+from repro.kernels import ssd_scan as _ssd
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def quantize(x: jax.Array, bits: int = 8, block: int = _q.BLOCK
+             ) -> Tuple[jax.Array, jax.Array]:
+    return _q.quantize_pallas(x, bits=bits, block=block, interpret=INTERPRET)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, block: int = _q.BLOCK,
+               out_dtype=jnp.float32) -> jax.Array:
+    return _q.dequantize_pallas(q, scale, block=block, out_dtype=out_dtype,
+                                interpret=INTERPRET)
+
+
+def rf_predict(feat: jax.Array, thr: jax.Array, leaf: jax.Array,
+               X: jax.Array, depth: int) -> jax.Array:
+    return _rf.rf_predict_pallas(feat, thr, leaf, X, depth=depth,
+                                 interpret=INTERPRET)
+
+
+def ssd_chunk(xq: jax.Array, Bq: jax.Array, Cq: jax.Array, da: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    return _ssd.ssd_chunk_pallas(xq, Bq, Cq, da, interpret=INTERPRET)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# Block-wise symmetric quantization (gradient compression)
+# ----------------------------------------------------------------------
+def quantize_ref(x: jax.Array, bits: int, block: int = 256
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x [n, d] -> (q int8 [n, d], scales f32 [n/block, d/block]).
+    Symmetric per-tile scaling; bits in {4, 8} (int4 stored in int8)."""
+    n, d = x.shape
+    assert n % block == 0 and d % block == 0, (n, d, block)
+    qmax = (1 << (bits - 1)) - 1
+    xt = x.reshape(n // block, block, d // block, block).transpose(0, 2, 1, 3)
+    amax = jnp.max(jnp.abs(xt.astype(jnp.float32)), axis=(2, 3))
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(xt.astype(jnp.float32) / scale[:, :, None, None]),
+                 -qmax, qmax).astype(jnp.int8)
+    q = q.transpose(0, 2, 1, 3).reshape(n, d)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 256,
+                   dtype=jnp.float32) -> jax.Array:
+    n, d = q.shape
+    qt = q.reshape(n // block, block, d // block, block).transpose(0, 2, 1, 3)
+    x = qt.astype(jnp.float32) * scale[:, :, None, None]
+    return x.transpose(0, 2, 1, 3).reshape(n, d).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Random-forest inference (complete-binary-tree layout)
+# ----------------------------------------------------------------------
+def rf_predict_ref(feat: jax.Array, thr: jax.Array, leaf: jax.Array,
+                   X: jax.Array, depth: int) -> jax.Array:
+    from repro.core.predictor import forest_predict_jnp
+    return forest_predict_jnp(feat, thr, leaf, X, depth)
+
+
+# ----------------------------------------------------------------------
+# SSD within-chunk scan (Mamba-2): diagonal block + boundary states
+# ----------------------------------------------------------------------
+def ssd_chunk_ref(xq: jax.Array, Bq: jax.Array, Cq: jax.Array,
+                  da: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One chunk, no inter-chunk state (that recurrence is cheap and
+    stays outside the kernel).
+
+    xq [Q,H,P] (pre-multiplied by dt), Bq,Cq [Q,N], da [H,Q] ->
+      y_diag [Q,H,P], states [H,P,N], plus decay vectors the caller needs:
+      returns (y_diag, states).
+    """
+    cum = jnp.cumsum(da.astype(jnp.float32), axis=-1)        # [H,Q]
+    seg = cum[:, :, None] - cum[:, None, :]
+    Q = xq.shape[0]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri, seg, -1e30))                  # [H,Q,Q]
+    cb = jnp.einsum("qn,kn->qk", Cq.astype(jnp.float32),
+                    Bq.astype(jnp.float32))
+    scores = cb[None] * L
+    y_diag = jnp.einsum("hqk,khp->qhp", scores, xq.astype(jnp.float32))
+    dec_r = jnp.exp(cum[:, -1:] - cum)                       # [H,Q]
+    states = jnp.einsum("hk,kn,khp->hpn", dec_r, Bq.astype(jnp.float32),
+                        xq.astype(jnp.float32))
+    return y_diag, states

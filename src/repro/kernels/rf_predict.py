@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: Random-Forest ensemble inference.
+
+TPU adaptation of tree traversal (DESIGN.md §2): trees live in a
+COMPLETE-binary-tree array layout, so level-order descent is pure index
+arithmetic (node -> 2*node+1+go_right) — no pointers, no data-dependent
+control flow. Gathers are expressed as ONE-HOT CONTRACTIONS (VPU/MXU
+friendly; TPU Pallas has no efficient dynamic row gather), which is the
+idiomatic TPU formulation for small tables:
+
+  thr[t, node_s]  ==  sum_k onehot(node_s)[k] * thr[t, k]
+
+Grid: one cell per sample block; the whole forest (feat/thr/leaf) is
+resident in VMEM per cell (e.g. 100 trees x depth 8 ~= 0.4 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SAMPLE_BLOCK = 128
+
+
+def _rf_kernel(feat_ref, thr_ref, leaf_ref, x_ref, out_ref, *, depth: int,
+               n_trees: int):
+    X = x_ref[...].astype(jnp.float32)            # [BS, F]
+    BS, F = X.shape
+    NN = thr_ref.shape[1]                          # 2^depth - 1
+    NL = leaf_ref.shape[1]                         # 2^depth
+
+    def tree_body(t, acc):
+        feat_t = feat_ref[t, :]                    # [NN] int32
+        thr_t = thr_ref[t, :]                      # [NN] f32
+        leaf_t = leaf_ref[t, :]                    # [NL] f32
+        node = jnp.zeros((BS,), jnp.int32)
+        for _ in range(depth):
+            oh = (node[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (BS, NN), 1)).astype(jnp.float32)    # [BS,NN]
+            f_s = oh @ feat_t.astype(jnp.float32)               # [BS]
+            t_s = oh @ thr_t                                    # [BS]
+            f_i = jnp.maximum(f_s, 0.0).astype(jnp.int32)
+            fh = (f_i[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (BS, F), 1)).astype(jnp.float32)     # [BS,F]
+            x_s = jnp.sum(fh * X, axis=1)                       # [BS]
+            go_right = (x_s > t_s).astype(jnp.int32)
+            node = 2 * node + 1 + go_right
+        lidx = node - (NN)                                       # leaf index
+        lh = (lidx[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (BS, NL), 1)).astype(jnp.float32)
+        return acc + lh @ leaf_t
+
+    acc = jax.lax.fori_loop(0, n_trees, tree_body, jnp.zeros((BS,), jnp.float32))
+    out_ref[...] = acc / n_trees
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("depth", "block", "interpret"))
+def rf_predict_pallas(feat: jax.Array, thr: jax.Array, leaf: jax.Array,
+                      X: jax.Array, depth: int, block: int = SAMPLE_BLOCK,
+                      interpret: bool = True) -> jax.Array:
+    """feat/thr [T, 2^d-1], leaf [T, 2^d], X [n, F] -> [n] predictions."""
+    n, F = X.shape
+    T = feat.shape[0]
+    pad = (-n) % block
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+    npad = X.shape[0]
+    grid = (npad // block,)
+    out = pl.pallas_call(
+        functools.partial(_rf_kernel, depth=depth, n_trees=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(feat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(thr.shape, lambda i: (0, 0)),
+            pl.BlockSpec(leaf.shape, lambda i: (0, 0)),
+            pl.BlockSpec((block, F), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(feat, thr, leaf, X)
+    return out[:n]

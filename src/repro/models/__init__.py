@@ -1,0 +1,1 @@
+from repro.models.layers import ShardCtx  # noqa: F401

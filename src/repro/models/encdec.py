@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder. The conv audio frontend is a STUB:
+``input_specs`` supplies precomputed frame embeddings [B, 1500, d_enc].
+Positions are sinusoidal on both towers (design note: real whisper uses
+learned decoder positions; sinusoidal keeps the param tree shape-static
+across input shapes — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models.layers import (KeyGen, ShardCtx, dense_init, einsum_f32, rms_norm,
+                                 shard_act, sinusoidal_positions, softmax_xent,
+                                 swiglu)
+from repro.models.transformer import (_cast_params, _maybe_remat, init_attn,
+                                      kv_eff_heads)
+
+
+def init_encdec_params(cfg: ModelConfig, key: jax.Array, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    kg = KeyGen(key)
+    e = cfg.encoder
+    d = cfg.d_model
+
+    def enc_block():
+        return {
+            "ln1": jnp.ones((e.d_model,), dtype),
+            "ln2": jnp.ones((e.d_model,), dtype),
+            "attn": init_attn(kg, cfg.replace(
+                d_model=e.d_model, n_heads=e.n_heads, n_kv_heads=e.n_heads), dtype),
+            "mlp": {"w1": dense_init(kg(), (e.d_model, e.d_ff), dtype),
+                    "w3": dense_init(kg(), (e.d_model, e.d_ff), dtype),
+                    "w2": dense_init(kg(), (e.d_ff, e.d_model), dtype)},
+        }
+
+    def dec_block():
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "ln_x": jnp.ones((d,), dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "attn": init_attn(kg, cfg, dtype),
+            "xattn": init_attn(kg, cfg, dtype),
+            "mlp": {"w1": dense_init(kg(), (d, cfg.d_ff), dtype),
+                    "w3": dense_init(kg(), (d, cfg.d_ff), dtype),
+                    "w2": dense_init(kg(), (cfg.d_ff, d), dtype)},
+        }
+
+    enc = [enc_block() for _ in range(e.n_layers)]
+    dec = [dec_block() for _ in range(cfg.n_layers)]
+    return {
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": jnp.ones((e.d_model,), dtype),
+        "enc_proj": dense_init(kg(), (e.d_model, d), dtype) if e.d_model != d
+        else None,
+        "embed": dense_init(kg(), (cfg.vocab, d), dtype, scale=0.02),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": dense_init(kg(), (d, cfg.vocab), dtype),
+    }
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    e = cfg.encoder
+    return cfg.replace(d_model=e.d_model, n_heads=e.n_heads,
+                       n_kv_heads=e.n_heads, rope_theta=0.0)
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ModelConfig,
+           ctx: ShardCtx) -> jax.Array:
+    """frames [B,F,d_enc] -> encoder states [B,F,d_model]."""
+    e = cfg.encoder
+    ecfg = _enc_cfg(cfg)
+    x = frames + sinusoidal_positions(frames.shape[1], e.d_model
+                                      ).astype(frames.dtype)[None]
+    x = shard_act(x, ctx)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, blk):
+        hp = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        h = h + att.gqa_forward(blk["attn"], hp, ctx, ecfg, positions,
+                                causal=False)
+        hp = rms_norm(h, blk["ln2"], cfg.norm_eps)
+        h = shard_act(h + swiglu(hp, blk["mlp"]["w1"], blk["mlp"]["w3"],
+                                 blk["mlp"]["w2"], ctx), ctx)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(lambda c, b: body(c, b), ctx),
+                        x, params["enc_blocks"])
+    x = rms_norm(x, params["enc_norm"], cfg.norm_eps)
+    if params.get("enc_proj") is not None:
+        x = x @ params["enc_proj"]
+    return x
+
+
+def _dec_block(blk, h, enc_out, positions, cfg, ctx):
+    hp = rms_norm(h, blk["ln1"], cfg.norm_eps)
+    h = h + att.gqa_forward(blk["attn"], hp, ctx, cfg, positions)
+    hp = rms_norm(h, blk["ln_x"], cfg.norm_eps)
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    xk = (enc_out @ blk["xattn"]["wk"]).reshape(
+        enc_out.shape[0], enc_out.shape[1], KV, D).transpose(0, 2, 1, 3)
+    xv = (enc_out @ blk["xattn"]["wv"]).reshape(
+        enc_out.shape[0], enc_out.shape[1], KV, D).transpose(0, 2, 1, 3)
+    h = h + att.gqa_forward(blk["xattn"], hp, ctx, cfg, positions,
+                            cross_kv=(xk, xv), causal=False)
+    hp = rms_norm(h, blk["ln2"], cfg.norm_eps)
+    h = shard_act(h + swiglu(hp, blk["mlp"]["w1"], blk["mlp"]["w3"],
+                             blk["mlp"]["w2"], ctx), ctx)
+    return h
+
+
+def encdec_loss(params: Dict, batch: Dict, cfg: ModelConfig, ctx: ShardCtx,
+                dp_size: int = 1) -> Tuple[jax.Array, Dict]:
+    cdt = jnp.dtype(cfg.dtype)
+    pc = _cast_params(params, cdt)
+    enc_out = encode(pc, batch["enc_frames"].astype(cdt), cfg, ctx)
+    tokens = batch["tokens"]
+    x = pc["embed"][tokens] + sinusoidal_positions(
+        tokens.shape[1], cfg.d_model).astype(cdt)[None]
+    x = shard_act(x, ctx)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(h, blk):
+        return _dec_block(blk, h, enc_out, positions, cfg, ctx), None
+
+    x, _ = jax.lax.scan(_maybe_remat(lambda c, b: body(c, b), ctx),
+                        x, pc["dec_blocks"])
+    x = rms_norm(x, pc["final_norm"], cfg.norm_eps)
+    from repro.models.layers import chunked_xent
+    ce = chunked_xent(x, pc["lm_head"], batch["targets"], ctx)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32),
+                "expert_load": jnp.zeros((1,), jnp.float32)}
+
+
+# ----------------------------------------------------------------------
+# Serving
+# ----------------------------------------------------------------------
+def encdec_cache_spec(cfg: ModelConfig, B: int, S_max: int, tp: int = 16,
+                      dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L, D = cfg.n_layers, cfg.resolved_head_dim
+    kve = kv_eff_heads(cfg, tp)
+    F = cfg.encoder.source_len
+    return {
+        "self_k": jax.ShapeDtypeStruct((L, B, kve, S_max, D), dtype),
+        "self_v": jax.ShapeDtypeStruct((L, B, kve, S_max, D), dtype),
+        "cross_k": jax.ShapeDtypeStruct((L, B, kve, F, D), dtype),
+        "cross_v": jax.ShapeDtypeStruct((L, B, kve, F, D), dtype),
+    }
+
+
+def encdec_prefill(params: Dict, batch: Dict, cfg: ModelConfig, ctx: ShardCtx,
+                   S_max: int, tp: int = 16, dp_size: int = 1):
+    """Encode audio + consume decoder prompt; build self+cross caches."""
+    cdt = jnp.dtype(cfg.dtype)
+    pc = _cast_params(params, cdt)
+    enc_out = encode(pc, batch["enc_frames"].astype(cdt), cfg, ctx)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = pc["embed"][tokens] + sinusoidal_positions(S, cfg.d_model
+                                                   ).astype(cdt)[None]
+    x = shard_act(x, ctx)
+    positions = jnp.arange(S)
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    kve = kv_eff_heads(cfg, tp)
+    r = kve // KV
+
+    def body(h, blk):
+        hp = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        k, v = att.gqa_make_cache(blk["attn"], hp, cfg, ctx, positions,
+                                  S_max, kve)
+        xk = (enc_out @ blk["xattn"]["wk"]).reshape(
+            B, -1, KV, D).transpose(0, 2, 1, 3)
+        xv = (enc_out @ blk["xattn"]["wv"]).reshape(
+            B, -1, KV, D).transpose(0, 2, 1, 3)
+        if r > 1:
+            xk, xv = jnp.repeat(xk, r, axis=1), jnp.repeat(xv, r, axis=1)
+        h = _dec_block(blk, h, enc_out, positions, cfg, ctx)
+        return h, {"self_k": k, "self_v": v, "cross_k": xk, "cross_v": xv}
+
+    x, cache = jax.lax.scan(body, x, pc["dec_blocks"])
+    x = rms_norm(x, pc["final_norm"], cfg.norm_eps)
+    return x[:, -1] @ pc["lm_head"], cache
+
+
+def encdec_decode(params: Dict, cache: Dict, tokens: jax.Array,
+                  pos: jax.Array, cfg: ModelConfig, ctx: ShardCtx,
+                  dp_size: int = 1):
+    cdt = jnp.dtype(cfg.dtype)
+    pc = _cast_params(params, cdt)
+    B = tokens.shape[0]
+    # closed-form sinusoidal row at runtime position (rope-free decoder)
+    half = cfg.d_model // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / (half - 1)))
+    ang = pos.astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+    x = pc["embed"][tokens] + pe.astype(cdt)
+    H, D = cfg.n_heads, cfg.resolved_head_dim
+
+    def body(h, xs):
+        blk, ck, cv, xk, xv = xs
+        hp = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        o, nk, nv = att.gqa_decode(blk["attn"], ck, cv, hp, pos, cfg, ctx)
+        h = h + o
+        hp = rms_norm(h, blk["ln_x"], cfg.norm_eps)
+        q = (hp @ blk["xattn"]["wq"]).reshape(B, 1, H, D).transpose(0, 2, 1, 3)
+        KVe = xk.shape[1]
+        qg = q.reshape(B, KVe, H // KVe, 1, D)
+        s = einsum_f32("bkgqd,bksd->bkgqs", qg * (D ** -0.5), xk)
+        p_ = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        o = jnp.einsum("bkgqs,bksd->bkgqd", p_.astype(xv.dtype), xv)
+        o = o.reshape(B, H, 1, D).transpose(0, 2, 1, 3).reshape(B, 1, H * D)
+        h = h + (o @ blk["xattn"]["wo"]).astype(h.dtype)
+        hp = rms_norm(h, blk["ln2"], cfg.norm_eps)
+        h = h + swiglu(hp, blk["mlp"]["w1"], blk["mlp"]["w3"],
+                       blk["mlp"]["w2"], ctx)
+        return h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (pc["dec_blocks"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    x = rms_norm(x, pc["final_norm"], cfg.norm_eps)
+    return x[:, -1] @ pc["lm_head"], new_cache

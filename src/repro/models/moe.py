@@ -1,0 +1,124 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity-bounded
+scatter/gather dispatch (honest FLOPs ~= k/cf of dense-all-experts),
+shared experts (DeepSeek-style), load-balance aux loss, and per-pod
+expert-load statistics that feed WANify's skew weights (w_s, §3.3.1).
+
+Dispatch is grouped: tokens are viewed as [G, T_g, d] where G equals the
+number of data-parallel shards, so the scatter is shard-local and the
+expert einsum shards E over the model axis (EP inside TP).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import KeyGen, ShardCtx, dense_init, shard
+
+
+def init_moe_params(kg: KeyGen, cfg: ModelConfig, dtype, stack: int = 0) -> Dict:
+    """stack>0 => leading layer dim for scan."""
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    L = (stack,) if stack else ()
+    p = {
+        "router": dense_init(kg(), L + (d, E), jnp.float32),
+        "w1": dense_init(kg(), L + (E, d, f), dtype),
+        "w3": dense_init(kg(), L + (E, d, f), dtype),
+        "w2": dense_init(kg(), L + (E, f, d), dtype),
+    }
+    if m.n_shared_experts > 0:
+        fs = f * m.n_shared_experts
+        p["ws1"] = dense_init(kg(), L + (d, fs), dtype)
+        p["ws3"] = dense_init(kg(), L + (d, fs), dtype)
+        p["ws2"] = dense_init(kg(), L + (fs, d), dtype)
+    return p
+
+
+def _capacity(t_per_group: int, cfg: ModelConfig, ctx: ShardCtx) -> int:
+    m = cfg.moe
+    cf = ctx.moe_capacity_factor or m.capacity_factor
+    c = int(t_per_group * m.top_k * cf / m.n_experts) + 1
+    return max(4, -(-c // 4) * 4)                         # round up to x4
+
+
+def moe_forward(p: Dict, x: jax.Array, ctx: ShardCtx, cfg: ModelConfig,
+                dp_size: int = 1) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [B,S,d] -> (y, aux_loss, expert_load[E]).
+
+    expert_load is the per-expert assignment fraction — the skew signal
+    WANify's global optimizer consumes as w_s.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    T = B * S
+    G = dp_size if (T % dp_size == 0 and T >= dp_size) else 1
+    Tg = T // G
+    C = _capacity(Tg, cfg, ctx)
+
+    xg = x.reshape(G, Tg, d)
+    xg = shard(xg, ctx, ctx.batch_axes or None, None, None)
+
+    logits = (xg @ p["router"].astype(jnp.float32))        # [G,Tg,E] f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                  # [G,Tg,k]
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch-style) + load stats -------------
+    onehot_any = jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=2)
+    load = jnp.mean(onehot_any, axis=(0, 1)) / k           # [E] fraction
+    imp = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(load * imp)
+
+    # ---- capacity positions via one-hot cumsum --------------------------
+    # positions are computed over the FLATTENED (token, choice) stream so
+    # different choices of one token land in distinct capacity slots
+    ef = eidx.reshape(G, Tg * k)
+    oh = jax.nn.one_hot(ef, E, dtype=jnp.int32)            # [G,Tg*k,E]
+    oh = shard(oh, ctx, ctx.batch_axes or None, None, ctx.model_axis)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1) - 1, ef[..., None],
+                              axis=2)[..., 0]              # [G,Tg*k]
+    keep = (pos < C).reshape(G, Tg, k)
+    pos_c = jnp.where(keep.reshape(G, Tg * k), pos, 0).reshape(G, Tg, k)
+
+    # ---- dispatch: k sequential scatters of [G,Tg,d] ---------------------
+    # (never materializes the [G,Tg*k,d] repeated-token tensor; the
+    # scatter value keeps d sharded over the model axis so the transient
+    # E-replicated buffer is 1/TP of the naive size)
+    xs_ = shard(xg, ctx, ctx.batch_axes or None, None, ctx.model_axis)
+
+    def scat(buf, ev, pv, val):
+        return buf.at[ev, pv].add(val)
+
+    buf = jnp.zeros((G, E, C, d), x.dtype)
+    buf = shard(buf, ctx, ctx.batch_axes or None, None, None, ctx.model_axis)
+    for j in range(k):
+        vals = jnp.where(keep[:, :, j][..., None], xs_, 0)
+        buf = jax.vmap(scat)(buf, eidx[:, :, j], pos_c[:, :, j], vals)
+    buf = shard(buf, ctx, ctx.batch_axes or None, ctx.model_axis, None, None)
+
+    # ---- expert FFN (E sharded over model axis => EP) --------------------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w1"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    ob = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    ob = shard(ob, ctx, ctx.batch_axes or None, ctx.model_axis, None, None)
+
+    # ---- gather back + combine (k sequential gathers) --------------------
+    def gath(o, ev, pv):
+        return o[ev, pv]
+
+    y = jnp.zeros((G, Tg, d), x.dtype)
+    gatesd = gates.astype(x.dtype)
+    for j in range(k):
+        yj = jax.vmap(gath)(ob, eidx[:, :, j], pos_c[:, :, j])
+        y = y + jnp.where(keep[:, :, j][..., None], yj, 0) \
+            * gatesd[:, :, j][..., None]
+
+    if m.n_shared_experts > 0:
+        hs = jax.nn.silu(xg @ p["ws1"]) * (xg @ p["ws3"])
+        y = y + hs @ p["ws2"]
+
+    return y.reshape(B, S, d), aux.astype(jnp.float32), load

@@ -1,0 +1,97 @@
+"""Family dispatch: one uniform API over all 10 assigned architectures.
+
+  init_params(cfg, key)                     -> param pytree
+  loss_fn(cfg, ctx, dp_size)(params,batch)  -> (loss, metrics)
+  prefill_fn(cfg, ctx, S_max, tp)(params,batch) -> (logits, cache)
+  decode_fn(cfg, ctx)(params,cache,tokens,pos)  -> (logits, cache)
+  cache_spec(cfg, B, S_max, tp)             -> ShapeDtypeStruct pytree
+  param_count(cfg) / active_param_count(cfg)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer, vlm
+from repro.models.layers import ShardCtx
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    if cfg.is_encdec:
+        return encdec.init_encdec_params(cfg, key, dtype)
+    if cfg.is_vlm:
+        return vlm.init_vlm_params(cfg, key, dtype)
+    return transformer.init_lm_params(cfg, key, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct param tree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.key(0))
+
+
+def loss_fn(cfg: ModelConfig, ctx: ShardCtx, dp_size: int = 1) -> Callable:
+    if cfg.is_encdec:
+        return functools.partial(encdec.encdec_loss, cfg=cfg, ctx=ctx,
+                                 dp_size=dp_size)
+    if cfg.is_vlm:
+        return functools.partial(vlm.vlm_loss, cfg=cfg, ctx=ctx,
+                                 dp_size=dp_size)
+    return functools.partial(transformer.lm_loss, cfg=cfg, ctx=ctx,
+                             dp_size=dp_size)
+
+
+def prefill_fn(cfg: ModelConfig, ctx: ShardCtx, S_max: int, tp: int = 16,
+               dp_size: int = 1) -> Callable:
+    if cfg.is_encdec:
+        return lambda p, b: encdec.encdec_prefill(p, b, cfg, ctx, S_max, tp,
+                                                  dp_size)
+    if cfg.is_vlm:
+        return lambda p, b: vlm.vlm_prefill(p, b, cfg, ctx, S_max, tp, dp_size)
+    return lambda p, b: transformer.lm_prefill(p, b["tokens"], cfg, ctx,
+                                               S_max, tp, dp_size)
+
+
+def decode_fn(cfg: ModelConfig, ctx: ShardCtx, dp_size: int = 1) -> Callable:
+    if cfg.is_encdec:
+        return lambda p, c, t, pos: encdec.encdec_decode(p, c, t, pos, cfg,
+                                                         ctx, dp_size)
+    if cfg.is_vlm:
+        return lambda p, c, t, pos: vlm.vlm_decode(p, c, t, pos, cfg, ctx,
+                                                   dp_size)
+    return lambda p, c, t, pos: transformer.lm_decode(p, c, t, pos, cfg, ctx,
+                                                      dp_size)
+
+
+def cache_spec(cfg: ModelConfig, B: int, S_max: int, tp: int = 16, dtype=None):
+    if cfg.is_encdec:
+        return encdec.encdec_cache_spec(cfg, B, S_max, tp, dtype)
+    if cfg.is_vlm:
+        return vlm.vlm_cache_spec(cfg, B, S_max, tp, dtype)
+    return transformer.lm_cache_spec(cfg, B, S_max, tp, dtype)
+
+
+# ----------------------------------------------------------------------
+# Param accounting (roofline MODEL_FLOPS = 6*N*D, N_active for MoE)
+# ----------------------------------------------------------------------
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    m = cfg.moe
+    # per-MoE-layer routed expert params
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = cfg.n_layers - m.first_dense_layers
+    inactive = n_moe_layers * per_expert * (m.n_experts - m.top_k)
+    return total - inactive

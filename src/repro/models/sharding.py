@@ -1,0 +1,166 @@
+"""Parameter / cache / batch PartitionSpec rules.
+
+FSDP on the `data` axis (params+optimizer sharded), TP/EP on `model`,
+pure DP across `pod` (params replicated — the WANify sync domain).
+Rules are (leaf-name, ndim)-based so they cover every family uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# leaves whose LAST dim is the "wide" (heads / d_ff / experts-out) dim
+_COL_PARALLEL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b",
+                 "w1", "w3", "ws1", "ws3", "in_proj", "enc_proj"}
+# leaves whose FIRST (non-stack) dim is wide
+_ROW_PARALLEL = {"wo", "w2", "ws2", "out_proj"}
+_REPLICATED = {"q_scale", "k_scale", "q_norm", "kv_norm", "A_log", "D",
+               "dt_bias"}
+
+
+def _key_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return p.key
+    return ""
+
+
+def _divides(n: int, size: Optional[int]) -> bool:
+    return bool(size) and size > 0 and n % size == 0
+
+
+def param_spec(path, shape: Tuple[int, ...], *, data: str = "data",
+               model: str = "model", data_size: int = 0,
+               model_size: int = 0) -> P:
+    """Sharding rule for one parameter leaf."""
+    name = _key_name(path)
+    nd = len(shape)
+
+    def ok(dim_i, size):
+        return _divides(shape[dim_i], size)
+
+    if name in _REPLICATED or nd == 0:
+        return P()
+    if name == "embed":                      # [V, d]
+        return P(model if ok(0, model_size) else None,
+                 data if ok(1, data_size) else None)
+    if name == "lm_head":                    # [d, V]
+        return P(data if ok(0, data_size) else None,
+                 model if ok(1, model_size) else None)
+    if name == "router":                     # [(L,) d, E] — E replicated
+        lead = (None,) * (nd - 2)
+        return P(*lead, data if ok(nd - 2, data_size) else None, None)
+    is_moe_expert = nd >= 3 and name in ("w1", "w2", "w3") and \
+        "moe" in [getattr(p, "key", "") for p in path]
+    if is_moe_expert:                        # [(L,) E, a, b]
+        lead = (None,) * (nd - 3)
+        e_ax = model if ok(nd - 3, model_size) else None
+        if name == "w2":                     # [E, f, d]
+            return P(*lead, e_ax, None, data if ok(nd - 1, data_size) else None)
+        return P(*lead, e_ax, data if ok(nd - 2, data_size) else None, None)
+    if name in _COL_PARALLEL and nd >= 2:
+        lead = (None,) * (nd - 2)
+        return P(*lead, data if ok(nd - 2, data_size) else None,
+                 model if ok(nd - 1, model_size) else None)
+    if name in _ROW_PARALLEL and nd >= 2:
+        lead = (None,) * (nd - 2)
+        return P(*lead, model if ok(nd - 2, model_size) else None,
+                 data if ok(nd - 1, data_size) else None)
+    if name == "conv_w":                     # [(L,) k, C]
+        lead = (None,) * (nd - 2)
+        return P(*lead, None, model if ok(nd - 1, model_size) else None)
+    if name in ("conv_b", "norm"):           # [(L,) C]
+        lead = (None,) * (nd - 1)
+        return P(*lead, model if ok(nd - 1, model_size) else None)
+    return P()                               # ln1/ln2/final_norm etc.
+
+
+def param_specs(params_struct: Any, *, data: str = "data",
+                model: str = "model", data_size: int = 0,
+                model_size: int = 0) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, data=data,
+                                      model=model, data_size=data_size,
+                                      model_size=model_size),
+        params_struct)
+
+
+# ----------------------------------------------------------------------
+# Batch / cache
+# ----------------------------------------------------------------------
+def batch_specs(batch_struct: Any, *, batch_axes=("data",),
+                batch_size: int = 0) -> Any:
+    """Shard dim-0 (global batch) over the DP axes when divisible."""
+    def rule(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        if _divides(shape[0], batch_size):
+            return P(batch_axes, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+    return jax.tree_util.tree_map_with_path(rule, batch_struct)
+
+
+def cache_spec_sharding(path, shape: Tuple[int, ...], *, batch_axes,
+                        dp_size: int, data: str, model: str,
+                        data_size: int, model_size: int) -> P:
+    """Decode-cache rules. Layouts:
+      k/v/self_k/...  [L, B, KVe, S, D]
+      c_kv/k_rope     [L, B, S, R]
+      conv [L, B, K-1, C]     state [L, B, H, Pd, N]
+    B shards over the DP axes when divisible; otherwise the SEQUENCE dim
+    takes the data axis — context-parallel decode for giant caches
+    (e.g. zamba2 long_500k, B=1)."""
+    name = _key_name(path)
+    nd = len(shape)
+    spec: list = [None] * nd
+    if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v") and nd == 5:
+        _, B, KV, S, _ = shape
+        if _divides(B, dp_size):
+            spec[1] = batch_axes
+        elif _divides(B, data_size):
+            spec[1] = data
+        elif _divides(S, data_size):
+            spec[3] = data
+        if _divides(KV, model_size):
+            spec[2] = model
+        elif spec[3] is None and _divides(S, model_size):
+            spec[3] = model
+    elif name in ("c_kv", "k_rope") and nd == 4:
+        _, B, S, _ = shape
+        if _divides(B, dp_size):
+            spec[1] = batch_axes
+        elif _divides(B, data_size):
+            spec[1] = data
+        elif _divides(S, data_size):
+            spec[2] = data
+        if spec[2] is None and _divides(S, model_size):
+            spec[2] = model
+    elif name == "conv" and nd == 4:
+        if _divides(shape[1], dp_size):
+            spec[1] = batch_axes
+        elif _divides(shape[1], data_size):
+            spec[1] = data
+        if _divides(shape[3], model_size):
+            spec[3] = model
+    elif name == "state" and nd == 5:
+        if _divides(shape[1], dp_size):
+            spec[1] = batch_axes
+        elif _divides(shape[1], data_size):
+            spec[1] = data
+        if _divides(shape[2], model_size):
+            spec[2] = model
+    return P(*spec)
+
+
+def cache_specs(cache_struct: Any, *, batch_axes=("data",), data="data",
+                model="model", data_size: int = 0, model_size: int = 0,
+                dp_size: int = 0) -> Any:
+    dp = dp_size or data_size
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec_sharding(
+            path, leaf.shape, batch_axes=batch_axes, dp_size=dp, data=data,
+            model=model, data_size=data_size, model_size=model_size),
+        cache_struct)

@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked quadratic-within-
+chunk / linear-across-chunk scan, causal depthwise conv, gated RMSNorm.
+
+The within-chunk computation is the compute hot-spot; kernels/ssd_scan.py
+provides the Pallas TPU kernel, this module is the pure-jnp path (also
+the oracle for the kernel tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (KeyGen, ShardCtx, dense_init, einsum_f32,
+                                 rms_norm, shard)
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    return d_inner, H, conv_ch, d_in_proj
+
+
+def init_ssm_params(kg: KeyGen, cfg: ModelConfig, dtype, stack: int = 0) -> Dict:
+    s = cfg.ssm
+    d_inner, H, conv_ch, d_in_proj = ssm_dims(cfg)
+    L = (stack,) if stack else ()
+    import numpy as np
+    return {
+        "in_proj": dense_init(kg(), L + (cfg.d_model, d_in_proj), dtype),
+        "conv_w": dense_init(kg(), L + (s.d_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros(L + (conv_ch,), dtype),
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)), L + (H,)).copy(),
+        "D": jnp.ones(L + (H,), jnp.float32),
+        "dt_bias": jnp.broadcast_to(
+            jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, H, dtype=jnp.float32))),
+            L + (H,)).copy(),
+        "norm": jnp.ones(L + (d_inner,), dtype),
+        "out_proj": dense_init(kg(), L + (d_inner, cfg.d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B,S,C], w [K,C] -> [B,S,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(xh: jax.Array, Bc: jax.Array, Cc: jax.Array, da: jax.Array,
+                chunk: int, init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan (n_groups=1 broadcast over heads).
+
+    xh: [B,S,H,P] (already multiplied by dt)  Bc,Cc: [B,S,N]
+    da: [B,S,H] per-step log decay (dt * a, a<0). Returns (y [B,S,H,P],
+    final_state [B,H,P,N]).
+    """
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:                      # pad tail: x=0 contributes nothing and
+        pad = Q - S % Q            # da=0 leaves the carried state intact
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        S = xh.shape[1]
+    nC = S // Q
+
+    xq = xh.reshape(B, nC, Q, H, P)
+    Bq = Bc.reshape(B, nC, Q, N)
+    Cq = Cc.reshape(B, nC, Q, N)
+    daq = da.reshape(B, nC, Q, H).transpose(0, 1, 3, 2)     # [B,nC,H,Q]
+    cum = jnp.cumsum(daq.astype(jnp.float32), axis=-1)       # [B,nC,H,Q]
+
+    # -- within-chunk (quadratic) part --------------------------------
+    seg = cum[..., :, None] - cum[..., None, :]              # [B,nC,H,Q,Q]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: upper-triangle seg is positive (decays are
+    # negative-cumulative) and exp would overflow; where-after-exp also
+    # poisons the backward with 0*inf=NaN.
+    L = jnp.exp(jnp.where(tri, seg, -1e30))
+    cb = einsum_f32("bcqn,bckn->bcqk", Cq, Bq)      # [B,nC,Q,Q]
+    scores = cb[:, :, None] * L                              # [B,nC,H,Q,Q]
+    y_diag = einsum_f32("bchqk,bckhp->bcqhp", scores, xq)
+
+    # -- chunk boundary states ----------------------------------------
+    dec_r = jnp.exp(cum[..., -1:] - cum)                     # [B,nC,H,Q]
+    states = einsum_f32("bchk,bckn,bckhp->bchpn", dec_r, Bq, xq)  # [B,nC,H,P,N]
+
+    # -- inter-chunk recurrence (linear scan over nC) ------------------
+    chunk_decay = jnp.exp(cum[..., -1])                      # [B,nC,H]
+
+    def body(carry, xs):
+        st_c, dec = xs
+        new = carry * dec[..., None, None] + st_c
+        return new, carry                                    # emit state ENTERING chunk
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    final, entered = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entered = entered.transpose(1, 0, 2, 3, 4)               # [B,nC,H,P,N]
+
+    # -- off-diagonal contribution -------------------------------------
+    dec_in = jnp.exp(cum)                                    # decay from chunk start
+    y_off = einsum_f32("bcqn,bchpn,bchq->bcqhp", Cq, entered, dec_in)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y[:, :S_orig].astype(xh.dtype), final
+
+
+def ssm_forward(p: Dict, x: jax.Array, ctx: ShardCtx, cfg: ModelConfig
+                ) -> jax.Array:
+    """Full-sequence Mamba2 block. x: [B,S,d] -> [B,S,d]."""
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = ssm_dims(cfg)
+    N, P = s.d_state, s.head_dim
+    B, S, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    zxbcdt = shard(zxbcdt, ctx, ctx.batch_axes or None, None, ctx.model_axis)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch:]
+
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :d_inner]
+    Bc = xBC[..., d_inner:d_inner + N]
+    Cc = xBC[..., d_inner + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                                 # [H] < 0
+    da = dt * a
+
+    xh = xs.reshape(B, S, H, P)
+    xh_dt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, _ = ssd_chunked(xh_dt, Bc, Cc, da, s.chunk)
+    y = y + p["D"][None, None, :, None].astype(jnp.float32) * xh
+
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ----------------------------------------------------------------------
+# Decode (recurrent state update — O(1) per token)
+# ----------------------------------------------------------------------
+def ssm_cache_spec(cfg: ModelConfig, B: int, dtype):
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = ssm_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((B, s.d_conv - 1, conv_ch), dtype),
+        "state": jax.ShapeDtypeStruct((B, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p: Dict, cache: Dict, x: jax.Array, cfg: ModelConfig,
+               ctx: ShardCtx) -> Tuple[jax.Array, Dict]:
+    """x: [B,1,d]; cache: {conv [B,K-1,C], state [B,H,P,N]}."""
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = ssm_dims(cfg)
+    N, P = s.d_state, s.head_dim
+    B = x.shape[0]
+
+    zxbcdt = (x[:, 0] @ p["in_proj"])                        # [B, dip]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch:]
+
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    xs = xBC[..., :d_inner]
+    Bc = xBC[..., d_inner:d_inner + N]
+    Cc = xBC[..., d_inner + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * a)                                    # [B,H]
+
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    st = cache["state"] * dec[..., None, None] + \
+        jnp.einsum("bhp,bn,bh->bhpn", xh, Bc.astype(jnp.float32), dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cc.astype(jnp.float32), st)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], {"conv": new_conv, "state": st}

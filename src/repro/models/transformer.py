@@ -1,0 +1,480 @@
+"""Decoder-only LM assembly for dense / moe / ssm / hybrid families.
+
+Layers are stacked ([L, ...] leaves) and applied with lax.scan (small HLO,
+fast multi-pod compile). `first_dense_layers` (DeepSeek-V2) run as an
+unstacked prologue. Hybrid (Zamba2) interleaves ONE shared attention+MLP
+block (single param set, its own KV cache per application) every
+`shared_attn_every` SSM layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (KeyGen, ShardCtx, dense_init, rms_norm,
+                                 shard, shard_act, softmax_xent, swiglu)
+
+AUX_LOSS_COEF = 0.01
+
+
+# ======================================================================
+# Init
+# ======================================================================
+def _init_block(kg: KeyGen, cfg: ModelConfig, dtype, kind: str, stack: int = 0):
+    """kind: dense | moe | ssm | shared_attn."""
+    L = (stack,) if stack else ()
+    d = cfg.d_model
+    blk: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "shared_attn"):
+        blk["ln1"] = jnp.ones(L + (d,), dtype)
+        blk["ln2"] = jnp.ones(L + (d,), dtype)
+        if stack:
+            ap = [init_attn(kg, cfg, dtype) for _ in range(stack)]
+            blk["attn"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ap)
+        else:
+            blk["attn"] = init_attn(kg, cfg, dtype)
+        if kind == "moe":
+            blk["moe"] = moe_mod.init_moe_params(kg, cfg, dtype, stack=stack)
+        else:
+            f = cfg.d_ff
+            blk["mlp"] = {
+                "w1": dense_init(kg(), L + (d, f), dtype),
+                "w3": dense_init(kg(), L + (d, f), dtype),
+                "w2": dense_init(kg(), L + (f, d), dtype),
+            }
+    elif kind == "ssm":
+        blk["ln1"] = jnp.ones(L + (d,), dtype)
+        blk["ssm"] = ssm_mod.init_ssm_params(kg, cfg, dtype, stack=stack)
+    return blk
+
+
+def init_attn(kg: KeyGen, cfg: ModelConfig, dtype):
+    if cfg.is_mla:
+        return att.init_mla_params(kg, cfg, dtype)
+    return att.init_gqa_params(kg, cfg, dtype)
+
+
+def init_lm_params(cfg: ModelConfig, key: jax.Array,
+                   dtype: Optional[Any] = None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    kg = KeyGen(key)
+    d, V = cfg.d_model, cfg.vocab
+    params: Dict[str, Any] = {
+        "embed": dense_init(kg(), (V, d), dtype, scale=0.02),
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": dense_init(kg(), (d, V), dtype),
+    }
+    n_pro = cfg.moe.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.n_layers - n_pro
+    if n_pro:
+        params["prologue"] = [_init_block(kg, cfg, dtype, "dense")
+                              for _ in range(n_pro)]
+    if cfg.family == "ssm":
+        params["blocks"] = _init_block(kg, cfg, dtype, "ssm", stack=n_scan)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _init_block(kg, cfg, dtype, "ssm", stack=n_scan)
+        params["shared_attn"] = _init_block(kg, cfg, dtype, "shared_attn")
+    elif cfg.is_moe:
+        params["blocks"] = _init_block(kg, cfg, dtype, "moe", stack=n_scan)
+    else:
+        params["blocks"] = _init_block(kg, cfg, dtype, "dense", stack=n_scan)
+    return params
+
+
+# ======================================================================
+# Forward blocks (full sequence)
+# ======================================================================
+def _attn_mlp_block(blk, x, positions, cfg: ModelConfig, ctx: ShardCtx,
+                    dp_size: int):
+    """Returns (x, aux_loss, expert_load)."""
+    h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+    if cfg.is_mla:
+        a = att.mla_forward(blk["attn"], h, ctx, cfg, positions)
+    else:
+        a = att.gqa_forward(blk["attn"], h, ctx, cfg, positions)
+    x = x + a
+    h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if "moe" in blk:
+        y, aux, load = moe_mod.moe_forward(blk["moe"], h, ctx, cfg, dp_size)
+    else:
+        y = swiglu(h, blk["mlp"]["w1"], blk["mlp"]["w3"], blk["mlp"]["w2"], ctx)
+        aux = jnp.zeros((), jnp.float32)
+        load = jnp.zeros((max(cfg.moe.n_experts, 1),), jnp.float32)
+    x = shard_act(x + y, ctx)
+    return x, aux, load
+
+
+def _ssm_block(blk, x, cfg: ModelConfig, ctx: ShardCtx):
+    h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+    return shard_act(x + ssm_mod.ssm_forward(blk["ssm"], h, ctx, cfg), ctx)
+
+
+def _maybe_remat(fn, ctx: ShardCtx):
+    if ctx.remat == "none":
+        return fn
+    if ctx.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def lm_backbone(params: Dict, x: jax.Array, positions: jax.Array,
+                cfg: ModelConfig, ctx: ShardCtx, dp_size: int = 1
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Embedded input -> final hidden. Returns (h, aux_loss, load[E])."""
+    aux_total = jnp.zeros((), jnp.float32)
+    load_total = jnp.zeros((max(cfg.moe.n_experts, 1),), jnp.float32)
+
+    for blk in params.get("prologue", []):
+        fn = _maybe_remat(
+            lambda b, v: _attn_mlp_block(b, v, positions, cfg, ctx, dp_size), ctx)
+        x, aux, _ = fn(blk, x)
+        aux_total += aux
+
+    if cfg.family in ("ssm", "hybrid"):
+        n_scan = jax.tree.leaves(params["blocks"])[0].shape[0]
+        every = cfg.shared_attn_every
+
+        def body(carry, xs):
+            h = carry
+            blk, use_attn = xs
+            if every:
+                def with_attn(v):
+                    o, _, _ = _attn_mlp_block(params["shared_attn"], v,
+                                              positions, cfg, ctx, dp_size)
+                    return o
+                h = jax.lax.cond(use_attn, with_attn, lambda v: v, h)
+            h = _ssm_block(blk, h, cfg, ctx)
+            return h, None
+
+        flags = (jnp.arange(n_scan) % every == 0) if every else \
+            jnp.zeros((n_scan,), bool)
+        x, _ = jax.lax.scan(_maybe_remat(lambda c, s: body(c, s), ctx),
+                            x, (params["blocks"], flags))
+    else:
+        def body(carry, blk):
+            h, aux, load = carry
+            h, a, l = _attn_mlp_block(blk, h, positions, cfg, ctx, dp_size)
+            return (h, aux + a, load + l), None
+
+        (x, aux_total, load_total), _ = jax.lax.scan(
+            _maybe_remat(lambda c, b: body(c, b), ctx),
+            (x, aux_total, load_total), params["blocks"])
+
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total, load_total
+
+
+def lm_logits(params, h):
+    return h @ params["lm_head"]
+
+
+def lm_forward(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+               ctx: ShardCtx, dp_size: int = 1,
+               extra_embeds: Optional[jax.Array] = None):
+    """tokens [B,S] (+optional prepended embeddings) -> logits [B,S*,V]."""
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    S = x.shape[1]
+    x = shard_act(x, ctx)
+    positions = jnp.arange(S)
+    pc = _cast_params(params, cdt)
+    h, aux, load = lm_backbone(pc, x, positions, cfg, ctx, dp_size)
+    return lm_logits(pc, h), aux, load
+
+
+def _cast_params(params, dtype):
+    def cast(x):
+        return x.astype(dtype) if x.dtype in (jnp.float32, jnp.bfloat16) and \
+            x.ndim >= 2 else x
+    return jax.tree.map(cast, params)
+
+
+def lm_loss(params: Dict, batch: Dict, cfg: ModelConfig, ctx: ShardCtx,
+            dp_size: int = 1) -> Tuple[jax.Array, Dict]:
+    """Backbone -> chunked CE (never materializes [B,S,V] f32 logits)."""
+    cdt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cdt)[tokens]
+    if "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(cdt), x], axis=1)
+    x = shard_act(x, ctx)
+    positions = jnp.arange(x.shape[1])
+    pc = _cast_params(params, cdt)
+    h, aux, load = lm_backbone(pc, x, positions, cfg, ctx, dp_size)
+    if "patch_embeds" in batch:
+        h = h[:, batch["patch_embeds"].shape[1]:]
+    from repro.models.layers import chunked_xent
+    ce = chunked_xent(h, pc["lm_head"], batch["targets"], ctx)
+    loss = ce + AUX_LOSS_COEF * aux
+    return loss, {"ce": ce, "aux": aux, "expert_load": load}
+
+
+# ======================================================================
+# Prefill / decode
+# ======================================================================
+def kv_eff_heads(cfg: ModelConfig, tp: int) -> int:
+    """Replicate KV heads up to the TP degree (never beyond the query
+    head count) so the cache shards fully."""
+    kv = cfg.n_kv_heads
+    tp = min(tp, cfg.n_heads or tp)
+    if kv >= tp or kv == 0:
+        return kv
+    r = -(-tp // kv)
+    return min(kv * r, cfg.n_heads)
+
+
+def lm_cache_spec(cfg: ModelConfig, B: int, S_max: int, tp: int = 16,
+                  dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_pro = cfg.moe.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.n_layers - n_pro
+    D = cfg.resolved_head_dim if cfg.n_heads else 0
+
+    def attn_spec(L):
+        if cfg.is_mla:
+            m = cfg.mla
+            shp = (L,) if L else ()
+            return {
+                "c_kv": jax.ShapeDtypeStruct(shp + (B, S_max, m.kv_lora_rank), dtype),
+                "k_rope": jax.ShapeDtypeStruct(shp + (B, S_max, m.qk_rope_head_dim), dtype),
+            }
+        kve = kv_eff_heads(cfg, tp)
+        S_c = min(S_max, cfg.sliding_window) if cfg.sliding_window else S_max
+        shp = (L,) if L else ()
+        return {
+            "k": jax.ShapeDtypeStruct(shp + (B, kve, S_c, D), dtype),
+            "v": jax.ShapeDtypeStruct(shp + (B, kve, S_c, D), dtype),
+        }
+
+    spec: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        spec["blocks"] = _stack_spec(ssm_mod.ssm_cache_spec(cfg, B, dtype), n_scan)
+    elif cfg.family == "hybrid":
+        spec["blocks"] = _stack_spec(ssm_mod.ssm_cache_spec(cfg, B, dtype), n_scan)
+        n_apps = -(-n_scan // cfg.shared_attn_every)
+        spec["shared_attn"] = _stack_spec(attn_spec(0), n_apps)
+    else:
+        if n_pro:
+            spec["prologue"] = [attn_spec(0) for _ in range(n_pro)]
+        spec["blocks"] = attn_spec(n_scan)
+    return spec
+
+
+def _stack_spec(tree, L):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), tree)
+
+
+def _attn_prefill_cache(blk, h_pre, cfg, ctx, positions, S_max, tp):
+    """h_pre: post-ln1 activations feeding attention."""
+    if cfg.is_mla:
+        c_kv, k_rope = att.mla_make_cache(blk["attn"], h_pre, cfg, positions, S_max)
+        return {"c_kv": c_kv, "k_rope": k_rope}
+    kve = kv_eff_heads(cfg, tp)
+    S_c = min(S_max, cfg.sliding_window) if cfg.sliding_window else S_max
+    if cfg.sliding_window and h_pre.shape[1] > S_c:
+        h_win = h_pre[:, -S_c:]
+        pos_win = positions[-S_c:]
+    else:
+        h_win, pos_win = h_pre, positions
+    k, v = att.gqa_make_cache(blk["attn"], h_win, cfg, ctx, pos_win, S_c, kve)
+    return {"k": k, "v": v}
+
+
+def lm_prefill(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+               ctx: ShardCtx, S_max: int, tp: int = 16, dp_size: int = 1,
+               extra_embeds: Optional[jax.Array] = None):
+    """Forward pass that also builds the decode cache. Returns
+    (last_logits [B,V], cache)."""
+    cdt = jnp.dtype(cfg.dtype)
+    pc = _cast_params(params, cdt)
+    x = pc["embed"][tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    S = x.shape[1]
+    x = shard_act(x, ctx)
+    positions = jnp.arange(S)
+    cache: Dict[str, Any] = {}
+
+    if "prologue" in pc:
+        cache["prologue"] = []
+        for blk in pc["prologue"]:
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            cache["prologue"].append(
+                _attn_prefill_cache(blk, h, cfg, ctx, positions, S_max, tp))
+            x, _, _ = _attn_mlp_block(blk, x, positions, cfg, ctx, dp_size)
+
+    if cfg.family in ("ssm", "hybrid"):
+        every = cfg.shared_attn_every
+
+        def body(carry, xs):
+            h = carry
+            blk, use_attn = xs
+            out = {}
+            if every:
+                def mk_cache(v):
+                    hp = rms_norm(v, pc["shared_attn"]["ln1"], cfg.norm_eps)
+                    return _attn_prefill_cache(pc["shared_attn"], hp, cfg, ctx,
+                                               positions, S_max, tp)
+
+                struct = jax.eval_shape(mk_cache, h)
+                out["attn_cache"] = jax.lax.cond(
+                    use_attn, mk_cache,
+                    lambda v: jax.tree.map(
+                        lambda s: jnp.zeros(s.shape, s.dtype), struct), h)
+
+                def with_attn(v):
+                    o, _, _ = _attn_mlp_block(pc["shared_attn"], v, positions,
+                                              cfg, ctx, dp_size)
+                    return o
+                h = jax.lax.cond(use_attn, with_attn, lambda v: v, h)
+            hn = rms_norm(h, blk["ln1"], cfg.norm_eps)
+            ssm_cache = _ssm_prefill_cache(blk["ssm"], hn, cfg, ctx)
+            h = shard_act(h + ssm_mod.ssm_forward(blk["ssm"], hn, ctx, cfg), ctx)
+            out["ssm_cache"] = ssm_cache
+            return h, out
+
+        n_scan = jax.tree.leaves(pc["blocks"])[0].shape[0]
+        flags = (jnp.arange(n_scan) % every == 0) if every else \
+            jnp.zeros((n_scan,), bool)
+        x, ys = jax.lax.scan(body, x, (pc["blocks"], flags))
+        cache["blocks"] = ys["ssm_cache"]
+        if every:
+            idx = jnp.nonzero(np_flags(n_scan, every), size=n_apps_of(n_scan, every))[0]
+            cache["shared_attn"] = jax.tree.map(lambda t: t[idx], ys["attn_cache"])
+    else:
+        def body(carry, blk):
+            h = carry
+            hp = rms_norm(h, blk["ln1"], cfg.norm_eps)
+            c = _attn_prefill_cache(blk, hp, cfg, ctx, positions, S_max, tp)
+            h, _, _ = _attn_mlp_block(blk, h, positions, cfg, ctx, dp_size)
+            return h, c
+
+        x, cache["blocks"] = jax.lax.scan(body, x, pc["blocks"])
+
+    h = rms_norm(x, pc["final_norm"], cfg.norm_eps)
+    logits = lm_logits(pc, h[:, -1])
+    return logits, cache
+
+
+def np_flags(n, every):
+    import numpy as np
+    return np.arange(n) % every == 0
+
+
+def n_apps_of(n, every):
+    return -(-n // every)
+
+
+def _ssm_prefill_cache(p, h, cfg, ctx):
+    """Run the pieces of the ssm block needed to extract decode state."""
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = ssm_mod.ssm_dims(cfg)
+    N, P = s.d_state, s.head_dim
+    B, S, _ = h.shape
+    zxbcdt = h @ p["in_proj"]
+    xBC_raw = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch:]
+    conv_state = xBC_raw[:, -(s.d_conv - 1):]
+    xBC = jax.nn.silu(ssm_mod._causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :d_inner]
+    Bc = xBC[..., d_inner:d_inner + N]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    da = dt * a
+    xh_dt = (xs.reshape(B, S, H, P).astype(jnp.float32) * dt[..., None]
+             ).astype(h.dtype)
+    Cc = xBC[..., d_inner + N:]
+    _, final = ssm_mod.ssd_chunked(xh_dt, Bc, Cc, da, s.chunk)
+    return {"conv": conv_state, "state": final}
+
+
+def lm_decode(params: Dict, cache: Dict, tokens: jax.Array, pos: jax.Array,
+              cfg: ModelConfig, ctx: ShardCtx, dp_size: int = 1):
+    """One-token decode step. tokens [B,1] -> (logits [B,V], new cache)."""
+    cdt = jnp.dtype(cfg.dtype)
+    pc = _cast_params(params, cdt)
+    x = pc["embed"][tokens]                                 # [B,1,d]
+    new_cache: Dict[str, Any] = {}
+
+    def attn_dec(blk, c, h):
+        hp = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        if cfg.is_mla:
+            o, ck, kr = att.mla_decode(blk["attn"], c["c_kv"], c["k_rope"],
+                                       hp, pos, cfg, ctx)
+            nc = {"c_kv": ck, "k_rope": kr}
+        else:
+            o, k, v = att.gqa_decode(blk["attn"], c["k"], c["v"], hp, pos,
+                                     cfg, ctx, window=cfg.sliding_window)
+            nc = {"k": k, "v": v}
+        h = h + o
+        hp = rms_norm(h, blk["ln2"], cfg.norm_eps)
+        if "moe" in blk:
+            y, _, _ = moe_mod.moe_forward(blk["moe"], hp, ctx, cfg, dp_size)
+        else:
+            y = swiglu(hp, blk["mlp"]["w1"], blk["mlp"]["w3"], blk["mlp"]["w2"], ctx)
+        return h + y, nc
+
+    if "prologue" in pc:
+        new_cache["prologue"] = []
+        for blk, c in zip(pc["prologue"], cache["prologue"]):
+            x, nc = attn_dec(blk, c, x)
+            new_cache["prologue"].append(nc)
+
+    if cfg.family in ("ssm", "hybrid"):
+        every = cfg.shared_attn_every
+        n_scan = jax.tree.leaves(pc["blocks"])[0].shape[0]
+
+        if every:
+            def body(carry, xs):
+                h, ac = carry
+                blk, sc, use_attn, app_idx = xs
+
+                def with_attn(operand):
+                    h_, ac_ = operand
+                    c_l = jax.tree.map(lambda t: t[app_idx], ac_)
+                    h2, nc = attn_dec(pc["shared_attn"], c_l, h_)
+                    ac2 = jax.tree.map(
+                        lambda buf, upd: jax.lax.dynamic_update_index_in_dim(
+                            buf, upd, app_idx, 0), ac_, nc)
+                    return h2, ac2
+
+                h, ac = jax.lax.cond(use_attn, with_attn, lambda o: o, (h, ac))
+                hn = rms_norm(h, blk["ln1"], cfg.norm_eps)
+                y, nsc = ssm_mod.ssm_decode(blk["ssm"], sc, hn, cfg, ctx)
+                return (h + y, ac), nsc
+
+            flags = jnp.arange(n_scan) % every == 0
+            app_idx = jnp.cumsum(flags) - 1
+            (x, ac), new_cache["blocks"] = jax.lax.scan(
+                body, (x, cache["shared_attn"]),
+                (pc["blocks"], cache["blocks"], flags, app_idx))
+            new_cache["shared_attn"] = ac
+        else:
+            def body(h, xs):
+                blk, sc = xs
+                hn = rms_norm(h, blk["ln1"], cfg.norm_eps)
+                y, nsc = ssm_mod.ssm_decode(blk["ssm"], sc, hn, cfg, ctx)
+                return h + y, nsc
+
+            x, new_cache["blocks"] = jax.lax.scan(
+                body, x, (pc["blocks"], cache["blocks"]))
+    else:
+        def body(h, xs):
+            blk, c = xs
+            h, nc = attn_dec(blk, c, h)
+            return h, nc
+
+        x, new_cache["blocks"] = jax.lax.scan(body, x, (pc["blocks"], cache["blocks"]))
+
+    h = rms_norm(x, pc["final_norm"], cfg.norm_eps)
+    return lm_logits(pc, h[:, -1]), new_cache

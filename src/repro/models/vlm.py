@@ -1,0 +1,47 @@
+"""InternVL2-style VLM: stubbed InternViT frontend (precomputed patch
+embeddings already in the LM embedding space) prepended to the token
+stream of an InternLM2 (GQA) backbone. Loss covers text positions only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx, softmax_xent
+from repro.models.transformer import (init_lm_params, lm_cache_spec,
+                                      lm_decode, lm_forward, lm_prefill)
+
+
+def init_vlm_params(cfg: ModelConfig, key: jax.Array, dtype=None) -> Dict:
+    # The vision tower is stubbed; the LM backbone carries all params.
+    return init_lm_params(cfg, key, dtype)
+
+
+def vlm_loss(params: Dict, batch: Dict, cfg: ModelConfig, ctx: ShardCtx,
+             dp_size: int = 1) -> Tuple[jax.Array, Dict]:
+    # lm_loss handles the patch prefix (and uses chunked CE)
+    from repro.models.transformer import lm_loss
+    return lm_loss(params, batch, cfg, ctx, dp_size)
+
+
+def vlm_cache_spec(cfg: ModelConfig, B: int, S_max: int, tp: int = 16,
+                   dtype=None) -> Dict:
+    # cache covers patches + text
+    return lm_cache_spec(cfg, B, S_max + cfg.encoder.source_len, tp, dtype)
+
+
+def vlm_prefill(params: Dict, batch: Dict, cfg: ModelConfig, ctx: ShardCtx,
+                S_max: int, tp: int = 16, dp_size: int = 1):
+    return lm_prefill(params, batch["tokens"], cfg, ctx,
+                      S_max + cfg.encoder.source_len, tp, dp_size,
+                      extra_embeds=batch["patch_embeds"])
+
+
+def vlm_decode(params: Dict, cache: Dict, tokens: jax.Array, pos: jax.Array,
+               cfg: ModelConfig, ctx: ShardCtx, dp_size: int = 1):
+    # decode positions are offset by the patch prefix
+    return lm_decode(params, cache, tokens, pos + cfg.encoder.source_len,
+                     cfg, ctx, dp_size)

@@ -1,0 +1,140 @@
+"""Serving engine: batched prefill + decode with KV caches, continuous
+request batching, and WANify-scheduled cross-pod KV-cache migration for
+disaggregated prefill/decode serving (the paper's "data transfer between
+DCs" in inference form).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.plan import WanPlan
+from repro.core.wansync import offset_schedule, _wire_encode, _wire_decode
+from repro.models import registry
+from repro.models.layers import ShardCtx
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S_prompt] int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    batch: int = 8
+    s_max: int = 256
+    tp: int = 1
+    greedy: bool = True
+
+
+class Engine:
+    """Static-batch engine: slot-based continuous batching; prefill joins
+    new requests into free slots, decode advances all live slots."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
+                 ctx: Optional[ShardCtx] = None):
+        self.cfg, self.params, self.sc = cfg, params, sc
+        self.ctx = ctx or ShardCtx()
+        self._prefill = jax.jit(registry.prefill_fn(
+            cfg, self.ctx, sc.s_max, tp=sc.tp))
+        self._decode = jax.jit(registry.decode_fn(cfg, self.ctx))
+        self.cache = None
+        self.pos = 0
+
+    def prefill(self, batch_tokens: np.ndarray,
+                extras: Optional[Dict] = None) -> np.ndarray:
+        batch = {"tokens": jnp.asarray(batch_tokens)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        logits, self.cache = self._prefill(self.params, batch)
+        self.pos = batch_tokens.shape[1]
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def decode(self, tokens: np.ndarray) -> np.ndarray:
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens[:, None]),
+            jnp.int32(self.pos))
+        self.pos += 1
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Batched generation over a request list (pads to the engine
+        batch; greedy decoding)."""
+        out: Dict[int, List[int]] = {}
+        B = self.sc.batch
+        for i in range(0, len(requests), B):
+            group = requests[i:i + B]
+            S = max(len(r.prompt) for r in group)
+            toks = np.zeros((B, S), np.int32)
+            for gi, r in enumerate(group):
+                toks[gi, S - len(r.prompt):] = r.prompt   # left-pad
+            nxt = self.prefill(toks)
+            live = np.zeros(B, np.int32)
+            maxn = max(r.max_new for r in group)
+            cur = nxt
+            gen = [[] for _ in range(B)]
+            for t in range(maxn):
+                for gi in range(len(group)):
+                    gen[gi].append(int(cur[gi]))
+                cur = self.decode(cur.astype(np.int32))
+            for gi, r in enumerate(group):
+                r.out = gen[gi][:r.max_new]
+                r.done = True
+                out[r.rid] = r.out
+        return out
+
+
+# ----------------------------------------------------------------------
+# Disaggregated serving: migrate a prefill pod's KV cache to decode pods
+# over the WANify-scheduled inter-pod links.
+# ----------------------------------------------------------------------
+def kv_migrate(cache: Any, plan: WanPlan, src_pod: int, *,
+               axis: str = "pod", compress: bool = True) -> Any:
+    """Broadcast `cache` (valid on src_pod) to all pods with per-offset
+    chunking + wire compression from the plan. Call inside shard_map with
+    the pod axis manual."""
+    P_ = plan.n_pods
+    if P_ <= 1:
+        return cache
+    sched = offset_schedule(plan)
+    rank = jax.lax.axis_index(axis)
+
+    def leaf(x):
+        out = x
+        for ph in sched:
+            o, chunks, bits = ph["offset"], ph["chunks"], ph["bits"]
+            if not compress:
+                bits = 32
+            perm = [(i, (i + o) % P_) for i in range(P_)]
+            flat = out.reshape(-1)
+            pad = (-flat.shape[0]) % max(chunks, 1)
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            parts = jnp.split(flat, chunks) if chunks > 1 else [flat]
+            rec = []
+            for part in parts:
+                enc, scale = _wire_encode(part, bits)
+                enc_r = jax.lax.ppermute(enc, axis, perm)
+                s_r = jax.lax.ppermute(scale, axis, perm) \
+                    if scale is not None else None
+                rec.append(_wire_decode(enc_r, s_r, x.dtype, bits))
+            recv = jnp.concatenate(rec) if chunks > 1 else rec[0]
+            recv = recv[:out.size].reshape(out.shape)
+            # keep own copy if we are within `o` hops downstream of src
+            came_from = (rank - o) % P_
+            out = jnp.where(came_from == src_pod, recv, out)
+        return out
+
+    return jax.tree.map(leaf, cache)

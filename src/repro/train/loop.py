@@ -1,0 +1,229 @@
+"""Host-side training orchestration: the WANify runtime controller.
+
+Per step: data -> jit'd train step. Around it, the pieces a 1000-node
+deployment needs:
+
+  * WANify controller — every `replan_every` steps takes a 1-second
+    snapshot of the (simulated) network, predicts runtime BW with the RF,
+    re-runs global optimization, advances the per-pod AIMD agents against
+    monitored BW, and swaps in the new WanPlan (jit re-lowers; the cache
+    is keyed by plan signature so oscillating plans never recompile).
+  * fault tolerance — async sharded checkpoints every `ckpt_every`;
+    `Trainer.restore_or_init` resumes from the newest complete manifest
+    (crash/restart contract). Simulated step failures retry from the last
+    checkpoint.
+  * straggler mitigation — per-step wall-time EWMA; a step slower than
+    `straggler_factor` x EWMA triggers an AIMD multiplicative-decrease on
+    the slow pod's links + immediate re-plan (and is recorded).
+  * elastic rescale — `Trainer.rescale(new_mesh)` rebuilds the step for a
+    new pod count; the RF predicts BW for the new cluster size (§3.3.2)
+    and checkpoints are mesh-agnostic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs.base import ModelConfig
+from repro.core.global_opt import global_optimize
+from repro.core.local_opt import AimdAgent
+from repro.core.plan import WanPlan
+from repro.core.predictor import BwPredictor
+from repro.data.pipeline import DataConfig, batches, pod_skew_weights, prefetch
+from repro.models import registry
+from repro.models.sharding import batch_specs, param_specs
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+from repro.wan.monitor import SnapshotMonitor
+from repro.wan.simulator import WanSimulator
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 25
+    log_every: int = 10
+    sync: str = "wanify"             # wanify | psum
+    compress: bool = False
+    replan_every: int = 20
+    straggler_factor: float = 2.5
+    max_conns: int = 8
+    use_skew_weights: bool = True
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, dcfg: DataConfig,
+                 loop: LoopConfig = LoopConfig(),
+                 opt: Optional[AdamWConfig] = None,
+                 sim: Optional[WanSimulator] = None,
+                 predictor: Optional[BwPredictor] = None):
+        self.cfg, self.mesh, self.dcfg, self.loop = cfg, mesh, dcfg, loop
+        self.opt = opt or AdamWConfig()
+        self.n_pods = mesh.shape.get("pod", 1)
+        self.multi_pod = "pod" in mesh.axis_names and self.n_pods > 1
+        self.sim = sim
+        self.predictor = predictor
+        self._step_cache: Dict[Any, Any] = {}
+        self._agents: Optional[List[AimdAgent]] = None
+        self.plan = self._initial_plan()
+        self.history: List[Dict[str, float]] = []
+        self.events: List[str] = []
+
+    # ------------------------------------------------------------------
+    # WANify controller
+    # ------------------------------------------------------------------
+    def _initial_plan(self) -> Optional[WanPlan]:
+        if not self.multi_pod:
+            return None
+        if self.sim is None or self.predictor is None or \
+                self.loop.sync != "wanify":
+            return WanPlan.uniform(self.n_pods)
+        return self._replan()
+
+    def _replan(self, skew_w: Optional[np.ndarray] = None) -> WanPlan:
+        mon = SnapshotMonitor(self.sim)
+        _, raw = mon.capture()
+        pred = self.predictor.predict_matrix(
+            self.sim.N, raw["snapshot_bw"], raw["mem_util"],
+            raw["cpu_load"], raw["retrans"], raw["dist"])
+        pods = pred[:self.n_pods, :self.n_pods]
+        gp = global_optimize(pods, M=self.loop.max_conns, w_s=skew_w)
+        if self._agents is None:
+            self._agents = [AimdAgent.from_plan(gp, i)
+                            for i in range(self.n_pods)]
+        else:
+            # fine-tune inside new bounds with monitored BW (local agents)
+            monitored = self.sim.measure_snapshot()[:self.n_pods, :self.n_pods]
+            for i, ag in enumerate(self._agents):
+                ag.min_cons, ag.max_cons = gp.min_cons[i], gp.max_cons[i]
+                ag.min_bw, ag.max_bw = gp.min_bw[i], gp.max_bw[i]
+                ag.unit_bw, ag.throttle = gp.pred_bw[i], gp.throttle[i]
+                ag.step(monitored[i])
+        cons = np.stack([ag.cons for ag in self._agents]) \
+            if self._agents else gp.max_cons
+        gp2 = gp
+        object.__setattr__  # noqa: B018  (WanPlan is frozen; rebuild)
+        return WanPlan(
+            n_pods=self.n_pods,
+            conns=tuple(tuple(int(v) for v in row) for row in cons),
+            pred_bw=tuple(tuple(float(v) for v in row) for row in gp2.pred_bw),
+            compress_bits=WanPlan.from_global(gp2).compress_bits,
+        )
+
+    def _get_step(self):
+        key = self.plan.signature() if self.plan else ("single",)
+        key = (key, self.loop.sync, self.loop.compress)
+        if key not in self._step_cache:
+            self._step_cache[key] = jax.jit(
+                make_train_step(self.cfg, self.mesh, plan=self.plan,
+                                opt=self.opt, sync=self.loop.sync,
+                                compress=self.loop.compress),
+                donate_argnums=(0, 1))
+        return self._step_cache[key]
+
+    # ------------------------------------------------------------------
+    def restore_or_init(self, key: jax.Array):
+        params = registry.init_params(self.cfg, key)
+        opt_state = init_opt_state(params)
+        start = 0
+        if self.loop.ckpt_dir:
+            latest = ckpt_lib.latest_step(self.loop.ckpt_dir)
+            if latest is not None:
+                state = ckpt_lib.restore(self.loop.ckpt_dir,
+                                         {"p": params, "o": opt_state})
+                params, opt_state = state["p"], state["o"]
+                start = latest
+                self.events.append(f"restored step {latest}")
+        if self.multi_pod:
+            # vmap-over-pods formulation: explicit pod-replicated leading
+            # dim (checkpoints stay pod-free => elastic across pod counts)
+            from repro.train.train_step import broadcast_to_pods
+            params = broadcast_to_pods(params, self.n_pods)
+            opt_state = broadcast_to_pods(opt_state, self.n_pods)
+        return params, opt_state, start
+
+    # ------------------------------------------------------------------
+    def run(self, key: jax.Array, fail_at: Optional[int] = None):
+        """fail_at: inject a simulated node failure at that step (the
+        fault-tolerance test path)."""
+        with jax.set_mesh(self.mesh):
+            return self._run(key, fail_at)
+
+    def _run(self, key: jax.Array, fail_at: Optional[int] = None):
+        params, opt_state, start = self.restore_or_init(key)
+        data = prefetch(batches(self.cfg, self.dcfg))
+        step_fn = self._get_step()
+        ewma = None
+        writer = None
+        step = start
+        while step < self.loop.steps:
+            batch = {k: jax.numpy.asarray(v) for k, v in next(data).items()}
+            t0 = time.perf_counter()
+            if fail_at is not None and step == fail_at:
+                fail_at = None
+                self.events.append(f"simulated failure at step {step}")
+                # crash/restart: reload newest complete checkpoint
+                params, opt_state, step = self.restore_or_init(key)
+                step_fn = self._get_step()
+                continue
+            params, opt_state, out = step_fn(params, opt_state, batch)
+            dt = time.perf_counter() - t0
+            # ---- straggler detection -------------------------------------
+            if ewma is None:
+                ewma = dt
+            if dt > self.loop.straggler_factor * ewma and self.multi_pod \
+                    and self._agents:
+                self.events.append(f"straggler at step {step} ({dt:.2f}s)")
+                for ag in self._agents:     # multiplicative decrease
+                    ag.step(np.zeros_like(ag.target_bw))
+                self.plan = self._replan()
+                step_fn = self._get_step()
+            ewma = 0.9 * ewma + 0.1 * dt
+            # ---- logging -------------------------------------------------
+            rec = {"step": step, "loss": float(out["loss"]),
+                   "grad_norm": float(out["grad_norm"]), "time": dt}
+            self.history.append(rec)
+            # ---- WANify re-plan -----------------------------------------
+            if self.multi_pod and self.loop.sync == "wanify" and \
+                    self.sim is not None and \
+                    (step + 1) % self.loop.replan_every == 0:
+                self.sim.advance()
+                skw = pod_skew_weights(np.asarray(batch["tokens"]),
+                                       self.n_pods, self.cfg.vocab) \
+                    if self.loop.use_skew_weights else None
+                new_plan = self._replan(skew_w=skw)
+                if new_plan.signature() != self.plan.signature():
+                    self.plan = new_plan
+                    step_fn = self._get_step()
+                    self.events.append(f"replanned at step {step}")
+            # ---- checkpoint ----------------------------------------------
+            if self.loop.ckpt_dir and (step + 1) % self.loop.ckpt_every == 0:
+                if writer is not None:
+                    writer.join()
+                if self.multi_pod:
+                    from repro.train.train_step import strip_pods
+                    tree = {"p": strip_pods(params), "o": strip_pods(opt_state)}
+                else:
+                    tree = {"p": params, "o": opt_state}
+                writer = ckpt_lib.save(self.loop.ckpt_dir, step + 1, tree,
+                                       async_=True)
+            step += 1
+        if writer is not None:
+            writer.join()
+        return params, opt_state
+
+    # ------------------------------------------------------------------
+    def rescale(self, new_mesh) -> "Trainer":
+        """Elastic scale: new pod count; RF covers the new cluster size."""
+        t = Trainer(self.cfg, new_mesh, self.dcfg, self.loop, self.opt,
+                    self.sim, self.predictor)
+        t.events = self.events + [f"rescaled to {dict(new_mesh.shape)}"]
+        return t

@@ -1,0 +1,56 @@
+"""Monitoring: snapshot-feature capture (Table 3) and the Eq. 1 / Table 2
+cost model (AWS t3.nano monitoring VM, 30-minute cadence per Tetrium).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.predictor import assemble_features
+from repro.core.plan import monitoring_cost, prediction_cost
+from repro.wan.simulator import WanSimulator
+
+# ---- Table 2 cost constants ------------------------------------------
+T3_NANO_PER_SEC = 0.0052 / 3600.0       # $/instance-second
+NET_COST_PER_GB = 0.09                  # $/GB egress (inter-region avg)
+MONITOR_SECONDS = 20.0                  # stable runtime needs >=20 s
+SNAPSHOT_SECONDS = 1.0
+MONITOR_EVERY_MIN = 30.0                # Tetrium's suggestion
+AVG_BW_MBPS = 200.0                     # Table 2's network-cost basis
+
+
+def measurement_net_cost(seconds: float, n_peers: int,
+                         avg_bw_mbps: float = AVG_BW_MBPS) -> float:
+    """$ for the data a node exchanges during one measurement."""
+    gb = avg_bw_mbps / 8.0 * seconds * n_peers / 1024.0
+    return gb * NET_COST_PER_GB
+
+
+def annual_costs(n_dcs: int) -> Dict[str, float]:
+    """Reproduces one row of Table 2."""
+    O = 365 * 24 * 60 / MONITOR_EVERY_MIN
+    z_full = measurement_net_cost(MONITOR_SECONDS, n_dcs - 1)
+    z_snap = measurement_net_cost(SNAPSHOT_SECONDS, n_dcs - 1)
+    full = monitoring_cost(O, n_dcs, T3_NANO_PER_SEC, MONITOR_SECONDS, z_full)
+    pred = prediction_cost(O, n_dcs, T3_NANO_PER_SEC, z_snap)
+    return {"runtime_monitoring": full, "prediction": pred,
+            "savings_frac": 1.0 - pred / full}
+
+
+@dataclass
+class SnapshotMonitor:
+    """Captures one cheap snapshot of the cluster (1-second features)."""
+    sim: WanSimulator
+
+    def capture(self, conns: Optional[np.ndarray] = None
+                ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Returns (X features [N*(N-1), 6], raw feature dict)."""
+        N = self.sim.N
+        c = np.ones((N, N)) if conns is None else conns
+        snap = self.sim.measure_snapshot(c)
+        mem, cpu, retr = self.sim.host_metrics(c, bw=snap)
+        X = assemble_features(N, snap, mem, cpu, retr, self.sim.dist)
+        return X, {"snapshot_bw": snap, "mem_util": mem, "cpu_load": cpu,
+                   "retrans": retr, "dist": self.sim.dist}

@@ -1,0 +1,83 @@
+"""The paper's 8-DC AWS testbed (Fig. 1): regions, geo-coordinates,
+pairwise distances, and the distance-calibrated single-connection BW
+model. Calibrated against the paper's published measurements:
+
+  US East <-> US West : 1700 Mbps (max, single connection)
+  US East <-> AP SE   :  121 Mbps (min, single connection)
+  AP SE   @ 9 conns   : ~1 Gbps   (parallel-connection knee ~8-9)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# region id -> (name, lat, lon)
+AWS_REGIONS: Dict[str, Tuple[str, float, float]] = {
+    "us-east": ("US East (N. Virginia)", 38.95, -77.45),
+    "us-west": ("US West (N. California)", 37.35, -121.96),
+    "ap-south": ("AP South (Mumbai)", 19.08, 72.88),
+    "ap-se": ("AP SE (Singapore)", 1.35, 103.82),
+    "ap-se2": ("AP SE-2 (Sydney)", -33.87, 151.21),
+    "ap-ne": ("AP NE (Tokyo)", 35.68, 139.65),
+    "eu-west": ("EU West (Ireland)", 53.35, -6.26),
+    "sa-east": ("SA East (Sao Paulo)", -23.55, -46.63),
+}
+
+DEFAULT_8DC: List[str] = list(AWS_REGIONS)
+
+
+def haversine_miles(a: Tuple[float, float], b: Tuple[float, float]) -> float:
+    R = 3958.8
+    la1, lo1, la2, lo2 = map(math.radians, (a[0], a[1], b[0], b[1]))
+    h = math.sin((la2 - la1) / 2) ** 2 + \
+        math.cos(la1) * math.cos(la2) * math.sin((lo2 - lo1) / 2) ** 2
+    return 2 * R * math.asin(math.sqrt(h))
+
+
+def distance_matrix(regions: List[str]) -> np.ndarray:
+    N = len(regions)
+    d = np.zeros((N, N))
+    for i in range(N):
+        for j in range(N):
+            if i != j:
+                d[i, j] = haversine_miles(AWS_REGIONS[regions[i]][1:],
+                                          AWS_REGIONS[regions[j]][1:])
+    return d
+
+
+# ----------------------------------------------------------------------
+# Single-connection BW(distance) — power-law calibrated to Fig. 1
+#   1700 Mbps @ ~2405 mi (us-east <-> us-west)
+#    121 Mbps @ ~9660 mi (us-east <-> ap-se)
+# ----------------------------------------------------------------------
+_D_REF = haversine_miles(AWS_REGIONS["us-east"][1:], AWS_REGIONS["us-west"][1:])
+_D_FAR = haversine_miles(AWS_REGIONS["us-east"][1:], AWS_REGIONS["ap-se"][1:])
+_ALPHA = math.log(1700.0 / 121.0) / math.log(_D_FAR / _D_REF)
+_A = 1700.0 * _D_REF ** _ALPHA
+
+BW_SINGLE_MAX = 2200.0     # Mbps cap for very close DCs
+BW_SINGLE_MIN = 60.0
+KNEE_CONNS = 8.5           # parallelism gain saturates ~8-9 connections
+NIC_CAP_MBPS = 4700.0      # per-VM WAN cap (~half of 10 Gbps, §2.1)
+INTRA_DC_BW = 10000.0
+
+
+def bw_single(dist_miles: float) -> float:
+    if dist_miles <= 0:
+        return INTRA_DC_BW
+    return float(np.clip(_A / dist_miles ** _ALPHA,
+                         BW_SINGLE_MIN, BW_SINGLE_MAX))
+
+
+def bw_single_matrix(regions: List[str]) -> np.ndarray:
+    d = distance_matrix(regions)
+    N = len(regions)
+    out = np.full((N, N), INTRA_DC_BW)
+    for i in range(N):
+        for j in range(N):
+            if i != j:
+                out[i, j] = bw_single(d[i, j])
+    return out

@@ -1,0 +1,57 @@
+"""Checkpointing: roundtrip, manifest contract, async, crash-atomicity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    r = ckpt.restore(str(tmp_path), t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_picks_newest(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 5, t)
+    ckpt.save(str(tmp_path), 3, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_async_save(tmp_path):
+    t = _tree()
+    th = ckpt.save(str(tmp_path), 9, t, async_=True)
+    th.join()
+    assert ckpt.latest_step(str(tmp_path)) == 9
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 2, t)
+    # simulate a crash mid-write: directory without manifest
+    os.makedirs(tmp_path / "step_00000007")
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    r = ckpt.restore(str(tmp_path), t)
+    assert r is not None
+
+
+def test_restore_casts_dtype(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    ckpt.save(str(tmp_path), 1, t)
+    like = {"w": jnp.ones((4,), jnp.bfloat16)}
+    r = ckpt.restore(str(tmp_path), like)
+    assert r["w"].dtype == jnp.bfloat16

@@ -1,0 +1,20 @@
+"""Monitoring cost model (Eq. 1 / Table 2): ~96% savings claim."""
+from repro.core.plan import monitoring_cost, prediction_cost
+from repro.wan.monitor import annual_costs
+
+
+def test_eq1_form():
+    # O x N x (x*y + z)
+    assert monitoring_cost(10, 4, 0.5, 2.0, 3.0) == 10 * 4 * (0.5 * 2 + 3)
+
+
+def test_savings_fraction():
+    """Table 2: prediction saves ~96% of runtime-monitoring cost."""
+    for n in (4, 6, 8):
+        c = annual_costs(n)
+        assert 0.90 <= c["savings_frac"] <= 0.99, c
+
+
+def test_costs_scale_with_cluster():
+    c4, c8 = annual_costs(4), annual_costs(8)
+    assert c8["runtime_monitoring"] > c4["runtime_monitoring"]

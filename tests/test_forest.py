@@ -1,0 +1,84 @@
+"""Random-Forest prediction model (§3.1, §5.8) — accuracy, warm start,
+cluster-size generalization (Fig. 11)."""
+import numpy as np
+import pytest
+
+from repro.core.forest import RandomForest
+from repro.core.predictor import BwPredictor
+from repro.wan.dataset import generate_dataset
+from repro.wan.monitor import SnapshotMonitor
+from repro.wan.simulator import WanSimulator
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_dataset(n_samples=250, seed=7)
+
+
+@pytest.fixture(scope="module")
+def forest(data):
+    X, y = data
+    cut = int(len(y) * 0.85)
+    rf = RandomForest(n_trees=100, seed=0).fit(X[:cut], y[:cut])
+    return rf, X, y, cut
+
+
+def test_training_accuracy(forest):
+    """Paper: 98.51% training accuracy (within-10% on train set)."""
+    rf, X, y, cut = forest
+    acc = rf.training_accuracy(X[:cut], y[:cut])
+    assert acc > 0.85, f"train acc {acc}"
+
+
+def test_holdout_r2(forest):
+    rf, X, y, cut = forest
+    r2 = rf.score(X[cut:], y[cut:])
+    assert r2 > 0.9, f"holdout R2 {r2}"
+
+
+def test_prediction_beats_static_measurement(forest):
+    """Fig. 11: predicted BW has fewer significant (>100 Mbps) errors vs
+    actual runtime BW than statically-measured BW, across cluster sizes."""
+    rf = forest[0]
+    pred_wins = 0
+    for n, seed in [(4, 11), (6, 12), (8, 13)]:
+        sim = WanSimulator(regions=WanSimulator().regions[:n], seed=seed)
+        si = sim.measure_static_independent()
+        sim.advance(10)
+        mon = SnapshotMonitor(sim)
+        _, raw = mon.capture()
+        pred = BwPredictor(rf).predict_matrix(
+            n, raw["snapshot_bw"], raw["mem_util"], raw["cpu_load"],
+            raw["retrans"], raw["dist"])
+        truth = sim.measure_runtime()
+        off = ~np.eye(n, dtype=bool)
+        sig_static = (np.abs(si - truth)[off] > 100).sum()
+        sig_pred = (np.abs(pred - truth)[off] > 100).sum()
+        pred_wins += int(sig_pred <= sig_static)
+    assert pred_wins >= 2, "prediction should beat static in >=2/3 sizes"
+
+
+def test_warm_start_adds_trees(forest):
+    rf = forest[0]
+    n0 = rf.feat.shape[0]
+    X, y = generate_dataset(n_samples=30, seed=99)
+    rf.fit(X, y, warm=True, n_new=10)
+    assert rf.feat.shape[0] == n0 + 10
+
+
+def test_backends_agree(forest):
+    rf, X, y, cut = forest
+    import jax.numpy as jnp
+    from repro.core.predictor import forest_predict_jnp
+    from repro.kernels import ops
+    f, t, l = rf.packed()
+    Xs = X[cut:cut + 64]
+    p_np = rf.predict(Xs)
+    p_j = np.asarray(forest_predict_jnp(jnp.asarray(f), jnp.asarray(t),
+                                        jnp.asarray(l), jnp.asarray(Xs),
+                                        rf.depth))
+    p_k = np.asarray(ops.rf_predict(jnp.asarray(f), jnp.asarray(t),
+                                    jnp.asarray(l), jnp.asarray(Xs),
+                                    depth=rf.depth))
+    np.testing.assert_allclose(p_j, p_np, rtol=1e-4, atol=0.05)
+    np.testing.assert_allclose(p_k, p_j, rtol=1e-4, atol=0.05)

@@ -1,0 +1,70 @@
+"""Local AIMD optimization (§3.2.2) — paper worked example + dynamics."""
+import numpy as np
+
+from repro.core.global_opt import GlobalPlan
+from repro.core.local_opt import AimdAgent
+
+
+def _paper_agent():
+    """Paper example: min-max from DC0 = {1000,800,240}-{1000,1600,600}
+    Mbps and {1,2,2}-{1,4,5} connections."""
+    return AimdAgent(
+        src=0,
+        min_cons=np.array([1, 2, 2]),
+        max_cons=np.array([1, 4, 5]),
+        min_bw=np.array([1000.0, 800.0, 240.0]),
+        max_bw=np.array([1000.0, 1600.0, 600.0]),
+        unit_bw=np.array([1000.0, 400.0, 120.0]),
+        throttle=np.array([np.inf, np.inf, np.inf]),
+    )
+
+
+def test_starts_at_maximum():
+    ag = _paper_agent()
+    np.testing.assert_array_equal(ag.cons, [1, 4, 5])
+    np.testing.assert_allclose(ag.target_bw, [1000.0, 1600.0, 600.0])
+
+
+def test_multiplicative_decrease_on_congestion():
+    ag = _paper_agent()
+    # paper: decrease mode when monitored < 1500 / 500 Mbps (target-100)
+    ag.step(np.array([1000.0, 1300.0, 350.0]))
+    assert ag.cons[1] == 2          # 4 -> 2 (half, >= min 2)
+    assert ag.target_bw[1] == 800.0  # halved to 800 (>= min 800)
+    assert ag.cons[2] == 2          # 5 -> 2 (half=2 >= min 2)
+    assert ag.target_bw[2] == 300.0  # 600/2, >= min 240
+
+
+def test_additive_increase_on_recovery():
+    ag = _paper_agent()
+    ag.step(np.array([1000.0, 1300.0, 350.0]))      # decrease
+    cons_before = ag.cons.copy()
+    ag.step(ag.target_bw.copy())                     # monitored == target
+    assert ag.cons[1] == cons_before[1] + 1
+    assert ag.cons[2] == cons_before[2] + 1
+
+
+def test_bounds_always_respected():
+    ag = _paper_agent()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        ag.step(rng.uniform(0, 2000, 3))
+        assert (ag.cons >= ag.min_cons).all()
+        assert (ag.cons <= ag.max_cons).all()
+        assert (ag.target_bw >= ag.min_bw - 1e-9).all()
+        assert (ag.target_bw <= ag.max_bw + 1e-9).all()
+
+
+def test_small_transfer_skips_toggle():
+    ag = _paper_agent()
+    before = ag.cons.copy()
+    ag.step(np.array([0.0, 0.0, 0.0]),
+            transfer_bytes=np.array([0, 1000, 1000]))  # < 1 MB
+    np.testing.assert_array_equal(ag.cons, before)
+
+
+def test_throttle_caps_target():
+    ag = _paper_agent()
+    ag.throttle = np.array([np.inf, 900.0, np.inf])
+    ag.step(ag.target_bw.copy())
+    assert ag.target_bw[1] <= 900.0

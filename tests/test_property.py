@@ -1,0 +1,92 @@
+"""Hypothesis property tests over system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.global_opt import global_optimize
+from repro.core.local_opt import AimdAgent
+from repro.core.plan import WanPlan, pick_bits
+from repro.core.relations import infer_dc_relations
+from repro.core.wansync import offset_schedule
+from repro.wan.simulator import WanSimulator
+
+bw_matrix = st.integers(2, 6).flatmap(
+    lambda n: st.lists(
+        st.lists(st.floats(60, 2200), min_size=n, max_size=n),
+        min_size=n, max_size=n))
+
+
+def _sym(m):
+    a = np.asarray(m)
+    a = (a + a.T) / 2
+    np.fill_diagonal(a, 10000.0)
+    return a
+
+
+@given(bw_matrix, st.floats(10, 300))
+@settings(max_examples=40, deadline=None)
+def test_relations_valid_range(m, D):
+    bw = _sym(m)
+    rel = infer_dc_relations(bw, D)
+    assert rel.min() >= 1
+    assert (np.diag(rel) == 1).all()
+
+
+@given(bw_matrix, st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_global_opt_invariants(m, M):
+    bw = _sym(m)
+    plan = global_optimize(bw, M=M)
+    assert (plan.min_cons >= 1).all()
+    assert (plan.max_cons >= plan.min_cons).all()
+    assert (plan.max_cons <= 2 * M).all()
+    assert (np.diag(plan.max_cons) == 1).all()
+    assert (plan.max_bw >= plan.min_bw - 1e-9).all()
+
+
+@given(bw_matrix)
+@settings(max_examples=25, deadline=None)
+def test_aimd_stays_in_bounds(m):
+    bw = _sym(m)
+    plan = global_optimize(bw, M=8)
+    ag = AimdAgent.from_plan(plan, 0)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        ag.step(rng.uniform(0, 3000, plan.n))
+        assert (ag.cons >= ag.min_cons).all()
+        assert (ag.cons <= ag.max_cons).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_waterfill_never_exceeds_caps(seed, n):
+    sim = WanSimulator(regions=WanSimulator().regions[:n], seed=seed)
+    rng = np.random.default_rng(seed)
+    conns = rng.integers(0, 10, (n, n)).astype(float)
+    np.fill_diagonal(conns, 0)
+    bw = sim.waterfill(conns)
+    off = ~np.eye(n, dtype=bool)
+    single = sim.link_bw_now()
+    assert (bw[off] <= np.maximum(conns, 1)[off] * single[off] * 1.01).all()
+    assert (np.where(off, bw, 0).sum(1) <= sim.nic_cap * 1.01).all()
+    assert (np.where(off, bw, 0).sum(0) <= sim.nic_cap * 1.01).all()
+    assert (bw[off] >= -1e-9).all()
+
+
+@given(st.floats(1, 5000))
+@settings(max_examples=30, deadline=None)
+def test_pick_bits_monotone(bw):
+    b = pick_bits(bw)
+    assert b in (8, 16, 32)
+    assert pick_bits(bw * 10) >= b or pick_bits(bw * 10) == 32
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_offset_schedule_covers_all_offsets(P):
+    plan = WanPlan.uniform(P, conns=5)
+    sched = offset_schedule(plan)
+    assert [s["offset"] for s in sched] == list(range(1, P))
+    for s in sched:
+        c = s["chunks"]
+        assert c & (c - 1) == 0          # power of two
+        assert 1 <= c <= 16

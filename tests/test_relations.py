@@ -1,0 +1,50 @@
+"""Algorithm 1 (INFER_DC_RELATIONS) — paper-exact worked example."""
+import numpy as np
+
+from repro.core.relations import infer_dc_relations
+
+PAPER_BW = np.array([[1000, 400, 120],
+                     [380, 1000, 130],
+                     [110, 120, 1000]], float)
+
+
+def test_paper_example():
+    rel = infer_dc_relations(PAPER_BW, D=30)
+    # filtered unique BWs {110, 380, 1000}: 1000->1, {400,380}->2,
+    # {120,130,110}->3 (paper Section 3.2.1)
+    expected = np.array([[1, 2, 3],
+                         [2, 1, 3],
+                         [3, 3, 1]])
+    np.testing.assert_array_equal(rel, expected)
+
+
+def test_diagonal_always_closest():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        n = rng.integers(2, 8)
+        bw = rng.uniform(100, 2000, (n, n))
+        np.fill_diagonal(bw, 10000)
+        rel = infer_dc_relations(bw, D=100)
+        assert (np.diag(rel) == 1).all()
+
+
+def test_filtering_merges_close_values():
+    bw = np.array([[1000.0, 500, 505],
+                   [500, 1000, 510],
+                   [505, 510, 1000]])
+    rel = infer_dc_relations(bw, D=30)
+    off = rel[~np.eye(3, dtype=bool)]
+    # all off-diagonal BWs are within D of each other -> one class
+    assert len(set(off.tolist())) == 1
+
+
+def test_monotone_weaker_link_larger_index():
+    bw = np.array([[1000.0, 900, 300, 100],
+                   [900, 1000, 350, 120],
+                   [300, 350, 1000, 700],
+                   [100, 120, 700, 1000]])
+    rel = infer_dc_relations(bw, D=50)
+    flat_bw = bw[~np.eye(4, dtype=bool)]
+    flat_rel = rel[~np.eye(4, dtype=bool)]
+    order = np.argsort(flat_bw)
+    assert (np.diff(flat_rel[order]) <= 0).all()

@@ -1,0 +1,104 @@
+"""Serving correctness: prefill+decode must reproduce the full-sequence
+forward logits (KV-cache consistency), per family; engine batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import registry
+from repro.models.layers import ShardCtx
+from repro.serve.engine import Engine, Request, ServeConfig
+
+CTX = ShardCtx(remat="none")
+
+# one representative per attention/cache mechanism
+FAMILIES = ["llama3-8b",        # GQA
+            "qwen3-4b",         # GQA + qk_norm
+            "minicpm3-4b",      # MLA (absorbed decode)
+            "h2o-danube-1.8b",  # SWA ring cache
+            "granite-moe-1b-a400m",  # MoE
+            "mamba2-2.7b",      # SSM recurrent state
+            "zamba2-2.7b",      # hybrid shared-attn cache
+            "whisper-medium",   # enc-dec cross-attn
+            "internvl2-2b"]     # VLM patch prefix
+
+
+def _full_logits(cfg, params, batch, upto):
+    """Logits at position `upto-1` from a full forward pass."""
+    if cfg.is_encdec:
+        from repro.models.encdec import encdec_loss  # noqa
+        # run decoder forward via loss path machinery: easier to use
+        # prefill at exactly `upto` tokens
+        return None
+    from repro.models.transformer import lm_forward
+    logits, _, _ = lm_forward(params, batch["tokens"][:, :upto], cfg, CTX,
+                              extra_embeds=batch.get("patch_embeds"))
+    return logits[:, -1]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_full_forward(arch):
+    cfg = reduced(get_config(arch))
+    params = registry.init_params(cfg, jax.random.key(0))
+    B, S0, n_dec, S_max = 2, 16, 4, 32
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab, (B, S0 + n_dec)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :S0])}
+    extras = {}
+    if cfg.is_encdec:
+        extras["enc_frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.encoder.source_len,
+                              cfg.encoder.d_model)).astype(np.float32))
+    if cfg.is_vlm:
+        extras["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.encoder.source_len,
+                                 cfg.d_model)).astype(np.float32))
+    batch.update(extras)
+
+    prefill = jax.jit(registry.prefill_fn(cfg, CTX, S_max, tp=1))
+    decode = jax.jit(registry.decode_fn(cfg, CTX))
+    logits_p, cache = prefill(params, batch)
+
+    for t in range(n_dec):
+        pos = S0 + t
+        logits_d, cache = decode(params, cache,
+                                 jnp.asarray(toks[:, pos:pos + 1]),
+                                 jnp.int32(pos))
+    # compare final decode logits against a full forward over the whole
+    # prefix (positions 0..S0+n_dec-1)
+    if cfg.is_encdec:
+        full_batch = dict(extras, tokens=jnp.asarray(toks))
+        logits_f, _ = jax.jit(
+            registry.prefill_fn(cfg, CTX, S_max, tp=1))(params, full_batch)
+    else:
+        full_batch = dict(extras, tokens=jnp.asarray(toks))
+        logits_f, _ = jax.jit(
+            registry.prefill_fn(cfg, CTX, S_max, tp=1))(params, full_batch)
+    a = np.asarray(logits_d, np.float32)
+    b = np.asarray(logits_f, np.float32)
+    top1 = (np.argmax(a, -1) == np.argmax(b, -1)).mean()
+    if cfg.is_moe:
+        # capacity-bounded MoE legitimately drops different tokens in the
+        # 1-token decode group vs the batched prefill group: compare the
+        # decisions, not the raw logits
+        assert top1 >= 0.99, f"{arch}: top-1 agreement {top1}"
+    else:
+        # bf16 accumulation-order drift; random reduced weights give
+        # near-tied logits, so compare values (argmax may flip on ties)
+        np.testing.assert_allclose(a, b, atol=0.2, rtol=0.2)
+
+
+def test_engine_batched_serving():
+    cfg = reduced(get_config("qwen3-4b"))
+    params = registry.init_params(cfg, jax.random.key(1))
+    eng = Engine(cfg, params, ServeConfig(batch=2, s_max=64, tp=1))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 5 + i
+                                               ).astype(np.int32), max_new=4)
+            for i in range(5)]
+    out = eng.serve(reqs)
+    assert set(out) == {0, 1, 2, 3, 4}
+    assert all(len(v) == 4 for v in out.values())
+    assert all(0 <= t < cfg.vocab for v in out.values() for t in v)

@@ -1,0 +1,104 @@
+"""WAN simulator — calibration against the paper's published numbers +
+max-min fairness invariants (Table 1 / §2)."""
+import numpy as np
+import pytest
+
+from repro.wan.simulator import WanSimulator
+from repro.wan import topology as topo
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return WanSimulator(seed=1)
+
+
+def test_fig1_calibration(sim):
+    ue = sim.regions.index("us-east")
+    uw = sim.regions.index("us-west")
+    ap = sim.regions.index("ap-se")
+    si = sim.measure_static_independent()
+    assert abs(si[ue, uw] - 1700) < 50      # paper: 1700 Mbps
+    assert abs(si[ue, ap] - 121) < 10       # paper: 121 Mbps
+
+
+def test_parallel_connection_knee(sim):
+    """~1 Gbps at 9 connections on the weakest link; no gain past ~8."""
+    ue, ap = sim.regions.index("us-east"), sim.regions.index("ap-se")
+    c = np.zeros((8, 8))
+    c[ue, ap] = 9
+    bw9 = sim.waterfill(c)[ue, ap]
+    assert 850 <= bw9 <= 1150               # paper: "up to 1 Gbps"
+    c[ue, ap] = 16
+    bw16 = sim.waterfill(c)[ue, ap]
+    assert bw16 <= bw9 * 1.15               # knee: no further gain
+
+
+def test_table1_static_vs_runtime_gaps():
+    sim = WanSimulator(seed=1)
+    si = sim.measure_static_independent()
+    sim.advance(10)                          # static data goes stale
+    rt = sim.measure_runtime()
+    off = ~np.eye(8, dtype=bool)
+    gaps = np.abs(rt - si)[off]
+    sig = int((gaps > 100).sum())
+    assert 10 <= sig <= 30                   # paper: 18 significant pairs
+
+
+def test_fairness_invariants(sim):
+    rng = np.random.default_rng(0)
+    conns = rng.integers(1, 9, (8, 8)).astype(float)
+    np.fill_diagonal(conns, 0)
+    bw = sim.waterfill(conns)
+    off = ~np.eye(8, dtype=bool)
+    single = sim.link_bw_now()
+    # per-connection rate never exceeds the single-connection ceiling
+    rate = bw / np.maximum(conns, 1e-9)
+    assert (rate[off] <= single[off] * 1.001).all()
+    # path cap: knee * single
+    assert (bw[off] <= single[off] * sim.knee * 1.001).all()
+    # NIC caps
+    out_tot = np.where(off, bw, 0).sum(axis=1)
+    in_tot = np.where(off, bw, 0).sum(axis=0)
+    assert (out_tot <= sim.nic_cap * 1.001).all()
+    assert (in_tot <= sim.nic_cap * 1.001).all()
+
+
+def test_contention_reduces_bw(sim):
+    """Runtime (all pairs) BW <= solo BW on every link."""
+    solo = sim.measure_static_independent()
+    allp = sim.waterfill(np.ones((8, 8)))
+    off = ~np.eye(8, dtype=bool)
+    assert (allp[off] <= solo[off] * 1.05).all()
+
+
+def test_heterogeneous_beats_uniform_min_bw():
+    """The Fig. 2 story on the simulator: WANify's heterogeneous
+    connections lift the cluster's minimum BW vs uniform-8."""
+    from repro.core.global_opt import global_optimize
+    sim = WanSimulator(seed=2)
+    pred = sim.measure_runtime()
+    plan = global_optimize(pred, M=8)
+    off = ~np.eye(8, dtype=bool)
+    uni = sim.measure_simultaneous(np.full((8, 8), 8.0))
+    het = sim.measure_simultaneous(plan.max_cons.astype(float))
+    assert het[off].min() > uni[off].min()
+
+
+def test_association_multiple_vms():
+    """§3.3.3: more VMs per DC => proportionally more NIC capacity."""
+    sim1 = WanSimulator(seed=3)
+    sim2 = WanSimulator(seed=3, vms_per_dc=np.full(8, 2.0))
+    c = np.full((8, 8), 8.0)
+    b1 = sim1.waterfill(c)
+    b2 = sim2.waterfill(c)
+    off = ~np.eye(8, dtype=bool)
+    assert b2[off].sum() > b1[off].sum() * 1.2
+
+
+def test_provider_refactoring():
+    """§3.3.3: provider factor scales link BW proportionally."""
+    pf = np.ones(8)
+    pf[:4] = 0.5
+    sim = WanSimulator(seed=4, provider_factor=pf)
+    base = WanSimulator(seed=4)
+    assert sim.base[0, 1] < base.base[0, 1]
