@@ -11,7 +11,7 @@ sub-optimal placements exactly as in §2.2.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 

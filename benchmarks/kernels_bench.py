@@ -57,7 +57,7 @@ def bench_wansync_model() -> List[Row]:
     """Analytic cross-pod sync time on the calibrated WAN: bytes on each
     offset class / link BW, with and without the WANify plan."""
     from repro.core.plan import WanPlan
-    from repro.core.wansync import offset_schedule
+    from repro.control import offset_schedule
     from repro.core.global_opt import global_optimize
     from repro.wan.simulator import WanSimulator
     rows = []

@@ -7,9 +7,8 @@ from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import (TPCDS, QueryResult, query_volumes, run_query,
+from benchmarks.common import (TPCDS, query_volumes, run_query,
                                wanify_inputs)
-from repro.core.global_opt import global_optimize
 from repro.core.local_opt import AimdAgent, run_agents
 from repro.core.plan import pick_bits
 from repro.wan.monitor import annual_costs

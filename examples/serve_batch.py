@@ -2,6 +2,11 @@
 Qwen3-family model, plus WANify-scheduled KV-cache migration between a
 prefill pod and decode pods (disaggregated serving).
 
+The migration plan comes from the shared control plane: a
+`WanifyController` closes the snapshot -> prediction -> optimization ->
+AIMD loop, and `Engine.replan()` adopts a fresh plan when the WAN
+shifts — the next `kv_migrate` picks up the new chunking/wire bits.
+
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 import os
@@ -16,17 +21,28 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config
 from repro.configs.base import reduced
-from repro.core.plan import WanPlan
+from repro.control import WanifyController
+from repro.core.predictor import SnapshotPredictor
 from repro.models import registry
 from repro.serve.engine import Engine, Request, ServeConfig, kv_migrate
+from repro.wan.simulator import WanSimulator
 
 
 def main():
     cfg = reduced(get_config("qwen3-4b"))
     params = registry.init_params(cfg, jax.random.key(0))
-    eng = Engine(cfg, params, ServeConfig(batch=4, s_max=128, tp=1))
+
+    # serve-side control plane: 2 pods monitored on the simulated WAN
+    # (SnapshotPredictor = no-RF ablation; swap in BwPredictor(rf) for
+    # the paper's learned runtime-BW prediction)
+    sim = WanSimulator(seed=0)
+    ctl = WanifyController(sim=sim, predictor=SnapshotPredictor(),
+                           n_pods=2)
+    eng = Engine(cfg, params, ServeConfig(batch=4, s_max=128, tp=1),
+                 controller=ctl)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -45,19 +61,20 @@ def main():
         print(f"[serve] req {rid}: {out[rid][:8]} ...")
 
     # ---- disaggregated serving: migrate the prefill KV cache across
-    # pods over the WANify-scheduled links (chunked + int8 wire) --------
+    # pods over the WANify-scheduled links (chunked + quantized wire) ---
     print("[serve] KV migration across 2 pods (WANify schedule) ...")
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    plan = WanPlan.uniform(2, conns=4, bits=8)
+    mesh = compat.make_mesh((2, 4), ("pod", "data"))
+    print(f"[serve] plan: conns={eng.plan.conns} "
+          f"schedule={eng.migration_schedule()}")
     cache = jax.tree.map(jnp.asarray, eng.cache)
 
     def migrate(c):
-        return kv_migrate(c, plan, src_pod=0, compress=True)
+        return kv_migrate(c, eng.plan, src_pod=0, compress=True)
 
-    sm = jax.shard_map(migrate, mesh=mesh, in_specs=(P(),), out_specs=P(),
-                       axis_names={"pod"}, check_vma=False)
-    with jax.set_mesh(mesh):
+    sm = compat.shard_map(migrate, mesh=mesh, in_specs=(P(),),
+                          out_specs=P(), axis_names={"pod", "data"},
+                          check_vma=False)
+    with compat.use_mesh(mesh):
         moved = jax.jit(sm)(cache)
     ok = jax.tree.all(jax.tree.map(
         lambda a, b: bool(jnp.allclose(a.astype(jnp.float32),
@@ -65,7 +82,13 @@ def main():
                                        atol=0.1, rtol=0.1)), cache, moved))
     n_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
     print(f"[serve] migrated {n_bytes / 2 ** 20:.1f} MiB of KV cache, "
-          f"int8 wire, roundtrip-consistent: {ok}")
+          f"quantized wire, roundtrip-consistent: {ok}")
+
+    # ---- the WAN shifts: replan and show the schedule adapting --------
+    sim.advance(5)
+    eng.replan()
+    print(f"[serve] after replan: conns={eng.plan.conns} "
+          f"schedule={eng.migration_schedule()}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import time
 
 import jax
 
+from repro import compat
 from repro.configs import get_config
 from repro.core.predictor import BwPredictor
 from repro.data.pipeline import DataConfig
@@ -46,8 +47,7 @@ def main():
                 jax.random.key(0))))
     print(f"[e2e] model: {n_params / 1e6:.1f}M params")
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     print("[e2e] training RF predictor ...")
     rf, acc, _ = train_default_forest(n_samples=150, n_trees=50)
     sim = WanSimulator(seed=0)
@@ -64,12 +64,17 @@ def main():
     t0 = time.time()
     tr.run(jax.random.key(0))
     dt = time.time() - t0
+    if not tr.history:
+        print("[e2e] no steps ran (--steps 0?)")
+        return
     first = tr.history[0]["loss"]
     last = tr.history[-1]["loss"]
     toks = args.steps * args.batch * args.seq
     print(f"[e2e] {args.steps} steps in {dt:.0f}s "
           f"({toks / dt:.0f} tok/s) loss {first:.3f} -> {last:.3f}")
     print(f"[e2e] events: {tr.events}")
+    print(f"[e2e] controller: {len(tr.controller.record)} replans, "
+          f"{len(tr.controller.plan_cache)} compiled plans cached")
     assert last < first, "loss must decrease"
 
 

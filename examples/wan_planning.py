@@ -7,8 +7,10 @@ Run:  PYTHONPATH=src python examples/wan_planning.py
 """
 import numpy as np
 
+from repro.control import WanifyController, offset_schedule
 from repro.core.global_opt import global_optimize
 from repro.core.local_opt import AimdAgent
+from repro.core.predictor import SnapshotPredictor
 from repro.core.relations import infer_dc_relations
 from repro.wan.simulator import WanSimulator
 
@@ -53,6 +55,19 @@ def main():
     agent.step(mon)
     print(f"AIMD (us-east agent): cons {before.tolist()} -> "
           f"{agent.cons.tolist()}")
+
+    print("\n== the closed loop: WanifyController over 4 pods ==")
+    ctl = WanifyController(sim=WanSimulator(seed=7),
+                           predictor=SnapshotPredictor(), n_pods=4)
+    print(f"initial plan: conns={ctl.plan.conns}")
+    print(f"wire schedule: {offset_schedule(ctl.plan)}")
+    for epoch in range(3):
+        ctl.sim.advance()
+        ctl.replan(reason=f"epoch:{epoch}")
+    print(f"after 3 epochs: conns={ctl.plan.conns}")
+    print(f"replan log: {[r['reason'] for r in ctl.record]}")
+    plan5 = ctl.rescale(5)
+    print(f"elastic rescale to 5 pods: conns={plan5.conns}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""JAX version-compatibility shims.
+
+The repo targets the modern mesh/shard_map surface (``jax.make_mesh``
+with ``axis_types``, ``jax.set_mesh``, ``jax.shard_map`` with
+``axis_names``/``check_vma``) but must also run on jax 0.4.x, where
+those spell differently:
+
+  * ``jax.sharding.AxisType`` does not exist — ``make_mesh`` takes no
+    ``axis_types`` keyword (all axes are Auto, which is what we want).
+  * ``jax.set_mesh`` does not exist — ``Mesh`` itself is the context
+    manager.
+  * ``jax.shard_map`` does not exist — it lives in
+    ``jax.experimental.shard_map`` and spells partial-manual meshes as
+    ``auto=<complement>`` with ``check_rep`` instead of ``check_vma``.
+
+Everything in the repo (src, tests, examples) goes through these three
+helpers instead of touching the raw API.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence, Set
+
+import jax
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with explicit Auto axis types when supported."""
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def use_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh
+    (``jax.set_mesh`` on new jax, the Mesh context manager on 0.4.x)."""
+    if HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Iterable[str]] = None,
+              check_vma: bool = False):
+    """Partial-manual shard_map: `axis_names` are manual, the rest stay
+    auto. Maps onto ``auto=``/``check_rep=`` on jax 0.4.x."""
+    manual: Set[str] = set(axis_names) if axis_names is not None \
+        else set(mesh.axis_names)
+    if HAS_TOP_LEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(set(mesh.axis_names) - manual)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

@@ -1,0 +1,193 @@
+"""WanifyController — the paper's closed loop as a first-class subsystem.
+
+The loop (cheap snapshot -> RF runtime-BW prediction -> global
+connection-range optimization -> per-DC AIMD adaptation -> transfer
+plan) used to live as private machinery inside the training loop; this
+controller owns it once, shared by training, serving, and planning:
+
+  * monitoring   — a :class:`SnapshotMonitor` captured at the CURRENT
+    connection matrix (the seed measured at all-ones, so the agents
+    adapted against traffic-free links);
+  * prediction   — any object with ``predict_matrix`` (the RF
+    :class:`BwPredictor`, or :class:`SnapshotPredictor` for the paper's
+    no-prediction ablation);
+  * optimization — :func:`global_optimize` ranges + per-DC AIMD agents
+    fine-tuning inside them;
+  * triggers     — periodic (:meth:`maybe_replan`), straggler
+    (:meth:`observe_step_time`), explicit topology change
+    (:meth:`topology_changed`), elastic rescale (:meth:`rescale`,
+    paper §3.3.2) and on-demand (:meth:`replan`, e.g. serve-side);
+  * plan cache   — :meth:`compiled` memoizes consumer-built artifacts
+    (jitted steps, lowered migrations) on ``WanPlan.signature()`` so
+    oscillating plans never recompile;
+  * event log    — human-readable `events` (shareable with a consumer's
+    own log) plus a structured `record` of every replan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.global_opt import global_optimize
+from repro.core.local_opt import AimdAgent
+from repro.core.plan import WanPlan
+from repro.wan.monitor import SnapshotMonitor
+from repro.wan.simulator import WanSimulator
+
+
+@dataclass
+class ControllerConfig:
+    max_conns: int = 8               # M, per-host connection budget
+    replan_every: int = 20           # periodic trigger cadence (steps)
+    straggler_factor: float = 2.5    # step slower than factor x EWMA
+    ewma_alpha: float = 0.1          # step-time EWMA smoothing
+    advance_sim: bool = True         # advance link fluctuation on the
+    #                                  periodic trigger (simulated time)
+
+
+class WanifyController:
+    """One instance per workload (a Trainer, a serving Engine, a
+    planner); `n_pods` may be smaller than the monitored cluster."""
+
+    def __init__(self, sim: WanSimulator, predictor: Any, n_pods: int,
+                 cfg: Optional[ControllerConfig] = None,
+                 events: Optional[List[str]] = None):
+        self.sim = sim
+        self.predictor = predictor
+        self.n_pods = int(n_pods)
+        self.cfg = cfg or ControllerConfig()
+        self.monitor = SnapshotMonitor(sim)
+        # a consumer may hand in its own log list; both append to it
+        self.events: List[str] = events if events is not None else []
+        self.record: List[Dict[str, Any]] = []
+        self.plan_cache: Dict[Tuple, Any] = {}
+        self._agents: Optional[List[AimdAgent]] = None
+        self._ewma: Optional[float] = None
+        self.plan = self.replan(reason="init")
+
+    # ------------------------------------------------------------------
+    # The closed loop
+    # ------------------------------------------------------------------
+    def current_conns(self) -> np.ndarray:
+        """Connection matrix currently in force, at monitor scale
+        (idle/unmanaged links run a single connection)."""
+        c = np.ones((self.sim.N, self.sim.N))
+        if self._agents is not None:
+            for i, ag in enumerate(self._agents):
+                c[i, :self.n_pods] = ag.cons
+        return c
+
+    def replan(self, skew_w: Optional[np.ndarray] = None,
+               reason: str = "explicit",
+               step: Optional[int] = None) -> WanPlan:
+        """Run one full loop iteration and return the resulting plan."""
+        conns = self.current_conns()
+        _, raw = self.monitor.capture(conns)
+        pred = self.predictor.predict_matrix(
+            self.sim.N, raw["snapshot_bw"], raw["mem_util"],
+            raw["cpu_load"], raw["retrans"], raw["dist"])
+        pods = pred[:self.n_pods, :self.n_pods]
+        gp = global_optimize(pods, M=self.cfg.max_conns, w_s=skew_w)
+        if self._agents is None or len(self._agents) != self.n_pods:
+            self._agents = [AimdAgent.from_plan(gp, i)
+                            for i in range(self.n_pods)]
+        else:
+            # fine-tune inside the new global bounds against BW monitored
+            # at the connection matrix actually in force
+            monitored = self.monitor.measure(conns)[:self.n_pods,
+                                                    :self.n_pods]
+            for i, ag in enumerate(self._agents):
+                ag.min_cons, ag.max_cons = gp.min_cons[i], gp.max_cons[i]
+                ag.min_bw, ag.max_bw = gp.min_bw[i], gp.max_bw[i]
+                ag.unit_bw, ag.throttle = gp.pred_bw[i], gp.throttle[i]
+                ag.step(monitored[i])
+        cons = np.stack([ag.cons for ag in self._agents])
+        plan = WanPlan(
+            n_pods=self.n_pods,
+            conns=tuple(tuple(int(v) for v in row) for row in cons),
+            pred_bw=tuple(tuple(float(v) for v in row)
+                          for row in gp.pred_bw),
+            compress_bits=WanPlan.from_global(gp).compress_bits,
+        )
+        self.plan = plan
+        self.record.append({"reason": reason, "step": step,
+                            "signature": plan.signature()})
+        return plan
+
+    # ------------------------------------------------------------------
+    # Triggers
+    # ------------------------------------------------------------------
+    def replan_due(self, step: int) -> bool:
+        return (step + 1) % self.cfg.replan_every == 0
+
+    def maybe_replan(self, step: int,
+                     skew_w: Optional[np.ndarray] = None
+                     ) -> Optional[WanPlan]:
+        """Periodic trigger: returns the new plan iff it is due AND its
+        signature differs (a signature-stable replan needs no re-lower,
+        so the consumer can keep its compiled step)."""
+        if not self.replan_due(step):
+            return None
+        if self.cfg.advance_sim:
+            self.sim.advance()
+        old_sig = self.plan.signature()
+        new = self.replan(skew_w=skew_w, reason="periodic", step=step)
+        if new.signature() == old_sig:
+            return None
+        self.events.append(f"replanned at step {step}")
+        return new
+
+    def observe_step_time(self, dt: float,
+                          step: Optional[int] = None
+                          ) -> Optional[WanPlan]:
+        """Straggler trigger: feed per-step wall time; a step slower
+        than `straggler_factor` x EWMA forces an AIMD multiplicative
+        decrease on every agent plus an immediate replan."""
+        if self._ewma is None:
+            self._ewma = dt
+        plan = None
+        if dt > self.cfg.straggler_factor * self._ewma:
+            self.events.append(f"straggler at step {step} ({dt:.2f}s)")
+            for ag in self._agents or []:
+                ag.step(np.zeros_like(ag.target_bw))
+            plan = self.replan(reason="straggler", step=step)
+        self._ewma = (1 - self.cfg.ewma_alpha) * self._ewma \
+            + self.cfg.ewma_alpha * dt
+        return plan
+
+    def topology_changed(self) -> WanPlan:
+        """Explicit trigger: the cluster changed under us (links added /
+        removed, provider migration). Discard adapted state — the old
+        AIMD bounds no longer describe the network."""
+        self._agents = None
+        self._ewma = None
+        self.events.append("topology changed; replanning from scratch")
+        return self.replan(reason="topology")
+
+    def rescale(self, n_pods: int,
+                skew_w: Optional[np.ndarray] = None) -> WanPlan:
+        """Elastic rescale (§3.3.2): plan for a new pod count. The
+        predictor covers the new cluster size (n_dcs is a Table-3
+        feature); agents restart from the new global ranges."""
+        if n_pods > self.sim.N:
+            raise ValueError(
+                f"n_pods={n_pods} exceeds monitored cluster ({self.sim.N})")
+        self.n_pods = int(n_pods)
+        self._agents = None
+        self._ewma = None        # step times change scale with pod count
+        self.events.append(f"rescaled controller to {n_pods} pods")
+        return self.replan(skew_w=skew_w, reason=f"rescale:{n_pods}")
+
+    # ------------------------------------------------------------------
+    # Plan cache
+    # ------------------------------------------------------------------
+    def compiled(self, extra_key: Tuple, build: Callable[[WanPlan], Any]):
+        """Memoize `build(plan)` on (plan.signature(), *extra_key):
+        re-plans that oscillate back to a seen signature reuse the
+        compiled artifact instead of re-lowering."""
+        key = (self.plan.signature(),) + tuple(extra_key)
+        if key not in self.plan_cache:
+            self.plan_cache[key] = build(self.plan)
+        return self.plan_cache[key]

@@ -1,0 +1,88 @@
+"""Plan -> wire lowering: the public schedule + codec API.
+
+Every subsystem that moves bytes across the WAN (training gradient
+sync, serving KV-cache migration, future bulk transfer paths) lowers a
+``WanPlan`` to the same two primitives:
+
+  * :func:`offset_schedule` — per offset class (pod ``i <-> (i+o) % P``,
+    the paper's closeness classes on a geo-ring), the chunk multiplicity
+    (heterogeneous parallel connections) and the wire bits (SAGQ-style
+    BW-aware quantization from the weakest predicted link in the class).
+  * :func:`wire_encode` / :func:`wire_decode` — the quantizing wire
+    codec. ``axes=None`` gives one scalar scale per segment (the
+    shard_map formulation, one segment per device); ``axes=(1, ...)``
+    gives per-slice scales rolled along with the payload (the batched
+    vmap-over-pods formulation). Previously these were two near-
+    duplicate private codecs in ``core/wansync.py``.
+
+``pick_bits`` (the BW -> bits policy) is re-exported from
+``core/plan.py`` so consumers need only this module.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import WanPlan, pick_bits
+
+__all__ = ["offset_schedule", "wire_encode", "wire_decode", "pick_bits"]
+
+MAX_CHUNKS = 16
+
+
+# ----------------------------------------------------------------------
+# Plan -> per-offset schedule
+# ----------------------------------------------------------------------
+def offset_schedule(plan: WanPlan) -> List[Dict[str, int]]:
+    """For each offset o in [1, P-1]: chunk multiplicity (max conns over
+    the pairs in that class — the WANify heterogeneous connections) and
+    wire bits (from the weakest predicted link in the class)."""
+    P = plan.n_pods
+    bits = plan.offset_bits()      # part of plan.signature(): replans
+    sched = []                     # with equal signatures lower equally
+    for o in range(1, P):
+        conns = max(plan.conns[i][(i + o) % P] for i in range(P))
+        # round to a power of two so chunk splits always divide segments
+        chunks = 1 << max(0, int(np.ceil(np.log2(max(1, int(conns))))))
+        sched.append({"offset": o, "chunks": min(chunks, MAX_CHUNKS),
+                      "bits": bits[o - 1]})
+    return sched
+
+
+# ----------------------------------------------------------------------
+# Wire codec (segment-scalar or per-slice scale; fine-grained blockwise
+# scaling is the Pallas kernel on real TPUs — kernels/quantize.py)
+# ----------------------------------------------------------------------
+def wire_encode(x: jax.Array, bits: int,
+                axes: Optional[Tuple[int, ...]] = None):
+    """Quantize `x` for the wire. Returns (payload, scale-or-None).
+
+    axes=None  -> one scalar scale over the whole segment.
+    axes=(...) -> scales reduced over `axes` with keepdims (one scale
+                  per remaining slice, e.g. per pod slice when
+                  axes=range(1, ndim)).
+    """
+    if bits >= 32:
+        return x, None
+    if bits == 16:
+        return x.astype(jnp.bfloat16), None
+    qmax = float((1 << (bits - 1)) - 1)
+    mag = jnp.abs(x.astype(jnp.float32))
+    amax = jnp.max(mag) if axes is None \
+        else jnp.max(mag, axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def wire_decode(q: jax.Array, scale, dtype, bits: int):
+    """Inverse of :func:`wire_encode` (scalar and per-slice scales share
+    one decode path)."""
+    if bits >= 32:
+        return q
+    if bits == 16:
+        return q.astype(dtype)
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -12,7 +12,7 @@ existing trees and appends new ones trained on the fresh data.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import numpy as np
@@ -126,7 +126,9 @@ class RandomForest:
             idx = rng.integers(0, len(y), size=len(y))      # bootstrap
             f, t, l = _fit_tree(X[idx], y[idx], self.depth, self.min_leaf,
                                 n_feats, rng)
-            feats.append(f), thrs.append(t), leaves.append(l)
+            feats.append(f)
+            thrs.append(t)
+            leaves.append(l)
         newf = np.stack(feats)
         newt = np.stack(thrs)
         newl = np.stack(leaves)

@@ -8,10 +8,9 @@ consumes `ring_chunks` to build the chunked ppermute schedule.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-import numpy as np
 
 from repro.core.global_opt import GlobalPlan
 
@@ -59,10 +58,23 @@ class WanPlan:
     def max_ring_chunks(self) -> int:
         return max(self.ring_chunks()) if self.n_pods > 1 else 1
 
+    def offset_bits(self) -> Tuple[int, ...]:
+        """Wire bits per offset class (offset o exchanges pod
+        i <-> (i+o) % P): quantization chosen from the weakest predicted
+        link in the class. The schedule lowering consumes this, so it
+        must be part of the compile-cache identity."""
+        P = self.n_pods
+        return tuple(
+            pick_bits(min(self.pred_bw[i][(i + o) % P] for i in range(P)))
+            for o in range(1, P))
+
     def signature(self) -> Tuple:
         """Hashable identity for jit-cache keying when the controller
-        re-plans (connection counts are compile-time constants)."""
-        return (self.n_pods, self.conns, self.compress_bits)
+        re-plans. Covers everything the lowered collective depends on:
+        connection counts (chunk multiplicities) and wire bits are
+        compile-time constants."""
+        return (self.n_pods, self.conns, self.compress_bits,
+                self.offset_bits())
 
 
 def pick_bits(link_bw_mbps: float, policy: Optional[dict] = None) -> int:

@@ -7,7 +7,6 @@ inference. Inference has three interchangeable backends:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -104,3 +103,20 @@ class BwPredictor:
             raise ValueError(backend)
         vals = np.maximum(vals, 1.0)             # BW is positive
         return matrix_from_pairs(vals, snap_bw.shape[0], diag=intra_dc_bw)
+
+
+@dataclass
+class SnapshotPredictor:
+    """No-RF ablation backend: trust the 1-second snapshot as-is (the
+    paper's no-prediction baseline). Drop-in for :class:`BwPredictor`
+    wherever training a forest is overkill — controller tests,
+    lightweight serve-side control planes."""
+
+    def predict_matrix(self, n_dcs: int, snap_bw: np.ndarray,
+                       mem_util: np.ndarray, cpu_load: np.ndarray,
+                       retrans: np.ndarray, dist: np.ndarray,
+                       intra_dc_bw: float = 10000.0,
+                       backend: str = "numpy") -> np.ndarray:
+        out = np.maximum(np.asarray(snap_bw, np.float64).copy(), 1.0)
+        np.fill_diagonal(out, intra_dc_bw)
+        return out

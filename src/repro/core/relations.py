@@ -10,7 +10,6 @@ closeness: 1000->1, {400,380}->2, {130,120,110}->3.
 """
 from __future__ import annotations
 
-from typing import Sequence
 
 import numpy as np
 

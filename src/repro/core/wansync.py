@@ -20,58 +20,13 @@ Algorithm 1's closeness classes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.plan import WanPlan, pick_bits
-
-
-# ----------------------------------------------------------------------
-# Plan -> per-offset schedule
-# ----------------------------------------------------------------------
-def offset_schedule(plan: WanPlan) -> List[Dict[str, int]]:
-    """For each offset o in [1, P-1]: chunk multiplicity (max conns over
-    the pairs in that class — the WANify heterogeneous connections) and
-    wire bits (from the weakest predicted link in the class)."""
-    P = plan.n_pods
-    sched = []
-    for o in range(1, P):
-        pairs = [(i, (i + o) % P) for i in range(P)]
-        conns = max(plan.conns[i][j] for i, j in pairs)
-        worst_bw = min(plan.pred_bw[i][j] for i, j in pairs)
-        # round to a power of two so chunk splits always divide segments
-        chunks = 1 << max(0, int(np.ceil(np.log2(max(1, int(conns))))))
-        sched.append({"offset": o, "chunks": min(chunks, 16),
-                      "bits": pick_bits(worst_bw)})
-    return sched
-
-
-# ----------------------------------------------------------------------
-# Wire codec (per-segment scalar scale; fine-grained blockwise scaling is
-# the Pallas kernel on real TPUs — kernels/quantize.py)
-# ----------------------------------------------------------------------
-def _wire_encode(x: jax.Array, bits: int):
-    if bits >= 32:
-        return x, None
-    if bits == 16:
-        return x.astype(jnp.bfloat16), None
-    qmax = float((1 << (bits - 1)) - 1)
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
-    scale = jnp.maximum(amax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
-    return q.astype(jnp.int8), scale
-
-
-def _wire_decode(q: jax.Array, scale, dtype, bits: int):
-    if bits >= 32:
-        return q
-    if bits == 16:
-        return q.astype(dtype)
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+from repro.control.schedule import offset_schedule, wire_decode, wire_encode
+from repro.core.plan import WanPlan
 
 
 def _permute(x, axis_name, perm):
@@ -120,16 +75,15 @@ def _leaf_wan_allreduce(g: jax.Array, sched, P: int, axis: str,
         parts = jnp.split(payload, chunks, axis=0) if chunks > 1 else [payload]
         recvd = []
         for part in parts:                        # parallel "connections"
-            enc, scale = _wire_encode(part, bits)
+            enc, scale = wire_encode(part, bits)
             enc_r = _permute(enc, axis, perm)
             scale_r = _permute(scale, axis, perm) if scale is not None else None
-            recvd.append(_wire_decode(enc_r, scale_r, g.dtype, bits))
+            recvd.append(wire_decode(enc_r, scale_r, g.dtype, bits))
         acc = acc + jnp.concatenate(recvd, axis=0) if chunks > 1 \
             else acc + recvd[0]
 
     # ---- all-gather: broadcast my reduced segment to every pod ---------
-    out_parts = [acc]                             # my own segment
-    gathered = {0: acc}
+    gathered = {0: acc}                           # my own segment
     for ph in sched:
         o, chunks, bits = ph["offset"], ph["chunks"], ph["bits"]
         if not compress:
@@ -138,10 +92,10 @@ def _leaf_wan_allreduce(g: jax.Array, sched, P: int, axis: str,
         parts = jnp.split(acc, chunks, axis=0) if chunks > 1 else [acc]
         recvd = []
         for part in parts:
-            enc, scale = _wire_encode(part, bits)
+            enc, scale = wire_encode(part, bits)
             enc_r = _permute(enc, axis, perm)
             scale_r = _permute(scale, axis, perm) if scale is not None else None
-            recvd.append(_wire_decode(enc_r, scale_r, g.dtype, bits))
+            recvd.append(wire_decode(enc_r, scale_r, g.dtype, bits))
         gathered[o] = jnp.concatenate(recvd, axis=0) if chunks > 1 else recvd[0]
 
     # Phase o delivered pod (rank-o)'s reduced segment, i.e. absolute
@@ -212,27 +166,6 @@ def wan_allreduce_batched(tree: Any, plan: WanPlan, *,
     sched = offset_schedule(plan)
     out_scale = 1.0 / P if mean else 1.0
 
-    def enc_b(x, bits):
-        """Per-pod-slice codec (scale per slice, rolled with payload)."""
-        if bits >= 32:
-            return x, None
-        if bits == 16:
-            return x.astype(jnp.bfloat16), None
-        qmax = float((1 << (bits - 1)) - 1)
-        red = tuple(range(1, x.ndim))
-        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red,
-                       keepdims=True)
-        s = jnp.maximum(amax, 1e-12) / qmax
-        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -qmax, qmax)
-        return q.astype(jnp.int8), s
-
-    def dec_b(q, s, dtype, bits):
-        if bits >= 32:
-            return q
-        if bits == 16:
-            return q.astype(dtype)
-        return (q.astype(jnp.float32) * s).astype(dtype)
-
     def per_leaf(g):
         # f32 accumulation only when lossy wire compression is active;
         # a blanket f32 copy of 236B-scale grads costs GiBs of HBM
@@ -248,10 +181,12 @@ def wan_allreduce_batched(tree: Any, plan: WanPlan, *,
                 parts = [g]
             rec = []
             for part in parts:
-                enc, scl = enc_b(part, bits)
+                # per-pod-slice scales (rolled along with the payload)
+                enc, scl = wire_encode(part, bits,
+                                       axes=tuple(range(1, part.ndim)))
                 enc_r = jnp.roll(enc, o, axis=0)          # -> ppermute
                 scl_r = jnp.roll(scl, o, axis=0) if scl is not None else None
-                rec.append(dec_b(enc_r, scl_r, jnp.float32, bits))
+                rec.append(wire_decode(enc_r, scl_r, jnp.float32, bits))
             got = jnp.concatenate(rec, axis=1) if len(rec) > 1 else rec[0]
             acc = acc + got
         return (acc * out_scale).astype(g.dtype)

@@ -25,8 +25,10 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, applicable, input_specs
 from repro.core.plan import WanPlan
@@ -164,13 +166,15 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         return cell
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             lowered, meta = build_lowered(arch, shape_name, mesh, **kw)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # jax 0.4.x: per-device list
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         pod_stride = 256 if "pod" in mesh.axis_names else 1 << 60
         # trip-count-weighted static analysis (XLA cost_analysis counts

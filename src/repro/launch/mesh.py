@@ -1,24 +1,25 @@
 """Production meshes. Importing this module never touches jax device
-state — meshes are built only inside the factory functions."""
+state — meshes are built only inside the factory functions.
+
+All mesh construction goes through `repro.compat.make_mesh`, which
+passes `axis_types=Auto` on jax versions that support it and omits the
+keyword on jax 0.4.x (where `jax.sharding.AxisType` does not exist and
+all axes are Auto by default).
+"""
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi-pod adds the 2-pod WAN axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(pods: int = 1, data: int = 16, model: int = 16):
     """General mesh factory (elastic scaling: any pod count)."""
     if pods > 1:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))

@@ -6,16 +6,16 @@ across input shapes — recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as att
-from repro.models.layers import (KeyGen, ShardCtx, dense_init, einsum_f32, rms_norm,
-                                 shard_act, sinusoidal_positions, softmax_xent,
-                                 swiglu)
+from repro.models.layers import (KeyGen, ShardCtx, dense_init, einsum_f32,
+                                 rms_norm, shard_act,
+                                 sinusoidal_positions, swiglu)
 from repro.models.transformer import (_cast_params, _maybe_remat, init_attn,
                                       kv_eff_heads)
 

@@ -1,7 +1,7 @@
 """Shared layers: norms, SwiGLU MLP, RoPE, sharding helpers, init."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 import jax

@@ -10,10 +10,9 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig

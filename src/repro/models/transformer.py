@@ -8,7 +8,6 @@ block (single param set, its own KV cache per application) every
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -19,7 +18,7 @@ from repro.models import attention as att
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (KeyGen, ShardCtx, dense_init, rms_norm,
-                                 shard, shard_act, softmax_xent, swiglu)
+                                 shard, shard_act, swiglu)
 
 AUX_LOSS_COEF = 0.01
 

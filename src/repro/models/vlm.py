@@ -7,12 +7,11 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import ShardCtx, softmax_xent
+from repro.models.layers import ShardCtx
 from repro.models.transformer import (init_lm_params, lm_cache_spec,
-                                      lm_decode, lm_forward, lm_prefill)
+                                      lm_decode, lm_prefill)
 
 
 def init_vlm_params(cfg: ModelConfig, key: jax.Array, dtype=None) -> Dict:

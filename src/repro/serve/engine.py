@@ -2,21 +2,25 @@
 request batching, and WANify-scheduled cross-pod KV-cache migration for
 disaggregated prefill/decode serving (the paper's "data transfer between
 DCs" in inference form).
+
+Plans come from the shared WANify control plane: hand the engine a
+`repro.control.WanifyController` and call :meth:`Engine.replan` whenever
+the WAN shifts (periodically, or when migration latency degrades) — the
+next `kv_migrate` picks up the new chunking/bits.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.control import WanifyController, offset_schedule, \
+    wire_decode, wire_encode
 from repro.core.plan import WanPlan
-from repro.core.wansync import offset_schedule, _wire_encode, _wire_decode
 from repro.models import registry
 from repro.models.layers import ShardCtx
 
@@ -43,7 +47,9 @@ class Engine:
     new requests into free slots, decode advances all live slots."""
 
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
-                 ctx: Optional[ShardCtx] = None):
+                 ctx: Optional[ShardCtx] = None,
+                 controller: Optional[WanifyController] = None,
+                 plan: Optional[WanPlan] = None):
         self.cfg, self.params, self.sc = cfg, params, sc
         self.ctx = ctx or ShardCtx()
         self._prefill = jax.jit(registry.prefill_fn(
@@ -51,6 +57,28 @@ class Engine:
         self._decode = jax.jit(registry.decode_fn(cfg, self.ctx))
         self.cache = None
         self.pos = 0
+        # WANify control plane for KV-cache migration plans
+        self.controller = controller
+        self.plan = plan if plan is not None else \
+            (controller.plan if controller is not None else None)
+
+    # ------------------------------------------------------------------
+    # WANify control plane hooks
+    # ------------------------------------------------------------------
+    def replan(self, skew_w: Optional[np.ndarray] = None) -> WanPlan:
+        """Run one control-loop iteration (snapshot -> prediction ->
+        optimization -> AIMD) and adopt the resulting migration plan."""
+        if self.controller is None:
+            raise RuntimeError("Engine.replan() needs a WanifyController")
+        self.plan = self.controller.replan(skew_w=skew_w, reason="serve")
+        return self.plan
+
+    def migration_schedule(self) -> List[Dict[str, int]]:
+        """Per-offset chunk/bits schedule `kv_migrate` will use under the
+        current plan."""
+        if self.plan is None:
+            raise RuntimeError("no migration plan (pass controller/plan)")
+        return offset_schedule(self.plan)
 
     def prefill(self, batch_tokens: np.ndarray,
                 extras: Optional[Dict] = None) -> np.ndarray:
@@ -81,7 +109,6 @@ class Engine:
             for gi, r in enumerate(group):
                 toks[gi, S - len(r.prompt):] = r.prompt   # left-pad
             nxt = self.prefill(toks)
-            live = np.zeros(B, np.int32)
             maxn = max(r.max_new for r in group)
             cur = nxt
             gen = [[] for _ in range(B)]
@@ -125,11 +152,11 @@ def kv_migrate(cache: Any, plan: WanPlan, src_pod: int, *,
             parts = jnp.split(flat, chunks) if chunks > 1 else [flat]
             rec = []
             for part in parts:
-                enc, scale = _wire_encode(part, bits)
+                enc, scale = wire_encode(part, bits)
                 enc_r = jax.lax.ppermute(enc, axis, perm)
                 s_r = jax.lax.ppermute(scale, axis, perm) \
                     if scale is not None else None
-                rec.append(_wire_decode(enc_r, s_r, x.dtype, bits))
+                rec.append(wire_decode(enc_r, s_r, x.dtype, bits))
             recv = jnp.concatenate(rec) if chunks > 1 else rec[0]
             recv = recv[:out.size].reshape(out.shape)
             # keep own copy if we are within `o` hops downstream of src

@@ -1,13 +1,13 @@
-"""Host-side training orchestration: the WANify runtime controller.
+"""Host-side training orchestration.
 
 Per step: data -> jit'd train step. Around it, the pieces a 1000-node
 deployment needs:
 
-  * WANify controller — every `replan_every` steps takes a 1-second
-    snapshot of the (simulated) network, predicts runtime BW with the RF,
-    re-runs global optimization, advances the per-pod AIMD agents against
-    monitored BW, and swaps in the new WanPlan (jit re-lowers; the cache
-    is keyed by plan signature so oscillating plans never recompile).
+  * WANify control plane — the Trainer consumes plans from the shared
+    `repro.control.WanifyController` (snapshot -> RF prediction ->
+    global optimization -> AIMD -> WanPlan). Periodic and straggler
+    triggers swap in new plans; the controller's plan cache is keyed by
+    plan signature so oscillating plans never recompile.
   * fault tolerance — async sharded checkpoints every `ckpt_every`;
     `Trainer.restore_or_init` resumes from the newest complete manifest
     (crash/restart contract). Simulated step failures retry from the last
@@ -22,25 +22,22 @@ deployment needs:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.base import ModelConfig
-from repro.core.global_opt import global_optimize
-from repro.core.local_opt import AimdAgent
+from repro.control import ControllerConfig, WanifyController
 from repro.core.plan import WanPlan
 from repro.core.predictor import BwPredictor
 from repro.data.pipeline import DataConfig, batches, pod_skew_weights, prefetch
 from repro.models import registry
-from repro.models.sharding import batch_specs, param_specs
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_step import make_train_step
-from repro.wan.monitor import SnapshotMonitor
 from repro.wan.simulator import WanSimulator
 
 
@@ -72,61 +69,53 @@ class Trainer:
         self.sim = sim
         self.predictor = predictor
         self._step_cache: Dict[Any, Any] = {}
-        self._agents: Optional[List[AimdAgent]] = None
-        self.plan = self._initial_plan()
         self.history: List[Dict[str, float]] = []
         self.events: List[str] = []
-
-    # ------------------------------------------------------------------
-    # WANify controller
-    # ------------------------------------------------------------------
-    def _initial_plan(self) -> Optional[WanPlan]:
-        if not self.multi_pod:
-            return None
-        if self.sim is None or self.predictor is None or \
-                self.loop.sync != "wanify":
-            return WanPlan.uniform(self.n_pods)
-        return self._replan()
-
-    def _replan(self, skew_w: Optional[np.ndarray] = None) -> WanPlan:
-        mon = SnapshotMonitor(self.sim)
-        _, raw = mon.capture()
-        pred = self.predictor.predict_matrix(
-            self.sim.N, raw["snapshot_bw"], raw["mem_util"],
-            raw["cpu_load"], raw["retrans"], raw["dist"])
-        pods = pred[:self.n_pods, :self.n_pods]
-        gp = global_optimize(pods, M=self.loop.max_conns, w_s=skew_w)
-        if self._agents is None:
-            self._agents = [AimdAgent.from_plan(gp, i)
-                            for i in range(self.n_pods)]
+        # ---- WANify control plane (repro.control) ---------------------
+        # The closed loop (snapshot -> prediction -> global optimization
+        # -> AIMD -> plan) lives in the shared controller; the Trainer
+        # only consumes plans and compiled steps.
+        self.controller: Optional[WanifyController] = None
+        if self.multi_pod and self.loop.sync == "wanify" and \
+                sim is not None and predictor is not None:
+            self.controller = WanifyController(
+                sim=sim, predictor=predictor, n_pods=self.n_pods,
+                cfg=ControllerConfig(
+                    max_conns=self.loop.max_conns,
+                    replan_every=self.loop.replan_every,
+                    straggler_factor=self.loop.straggler_factor),
+                events=self.events)
+            self._plan: Optional[WanPlan] = None
+        elif self.multi_pod:
+            self._plan = WanPlan.uniform(self.n_pods)
         else:
-            # fine-tune inside new bounds with monitored BW (local agents)
-            monitored = self.sim.measure_snapshot()[:self.n_pods, :self.n_pods]
-            for i, ag in enumerate(self._agents):
-                ag.min_cons, ag.max_cons = gp.min_cons[i], gp.max_cons[i]
-                ag.min_bw, ag.max_bw = gp.min_bw[i], gp.max_bw[i]
-                ag.unit_bw, ag.throttle = gp.pred_bw[i], gp.throttle[i]
-                ag.step(monitored[i])
-        cons = np.stack([ag.cons for ag in self._agents]) \
-            if self._agents else gp.max_cons
-        gp2 = gp
-        object.__setattr__  # noqa: B018  (WanPlan is frozen; rebuild)
-        return WanPlan(
-            n_pods=self.n_pods,
-            conns=tuple(tuple(int(v) for v in row) for row in cons),
-            pred_bw=tuple(tuple(float(v) for v in row) for row in gp2.pred_bw),
-            compress_bits=WanPlan.from_global(gp2).compress_bits,
-        )
+            self._plan = None
+
+    @property
+    def plan(self) -> Optional[WanPlan]:
+        """The plan in force — always the controller's latest when a
+        control plane is attached (never a stale copy)."""
+        if self.controller is not None:
+            return self.controller.plan
+        return self._plan
+
+    # ------------------------------------------------------------------
+    def _build_step(self, plan: Optional[WanPlan]):
+        return jax.jit(
+            make_train_step(self.cfg, self.mesh, plan=plan, opt=self.opt,
+                            sync=self.loop.sync,
+                            compress=self.loop.compress),
+            donate_argnums=(0, 1))
 
     def _get_step(self):
-        key = self.plan.signature() if self.plan else ("single",)
-        key = (key, self.loop.sync, self.loop.compress)
+        if self.controller is not None:
+            # keyed on plan.signature(): oscillating plans never recompile
+            return self.controller.compiled(
+                (self.loop.sync, self.loop.compress), self._build_step)
+        key = (self.plan.signature() if self.plan else ("single",),
+               self.loop.sync, self.loop.compress)
         if key not in self._step_cache:
-            self._step_cache[key] = jax.jit(
-                make_train_step(self.cfg, self.mesh, plan=self.plan,
-                                opt=self.opt, sync=self.loop.sync,
-                                compress=self.loop.compress),
-                donate_argnums=(0, 1))
+            self._step_cache[key] = self._build_step(self.plan)
         return self._step_cache[key]
 
     # ------------------------------------------------------------------
@@ -154,14 +143,13 @@ class Trainer:
     def run(self, key: jax.Array, fail_at: Optional[int] = None):
         """fail_at: inject a simulated node failure at that step (the
         fault-tolerance test path)."""
-        with jax.set_mesh(self.mesh):
+        with compat.use_mesh(self.mesh):
             return self._run(key, fail_at)
 
     def _run(self, key: jax.Array, fail_at: Optional[int] = None):
         params, opt_state, start = self.restore_or_init(key)
         data = prefetch(batches(self.cfg, self.dcfg))
         step_fn = self._get_step()
-        ewma = None
         writer = None
         step = start
         while step < self.loop.steps:
@@ -176,34 +164,24 @@ class Trainer:
                 continue
             params, opt_state, out = step_fn(params, opt_state, batch)
             dt = time.perf_counter() - t0
-            # ---- straggler detection -------------------------------------
-            if ewma is None:
-                ewma = dt
-            if dt > self.loop.straggler_factor * ewma and self.multi_pod \
-                    and self._agents:
-                self.events.append(f"straggler at step {step} ({dt:.2f}s)")
-                for ag in self._agents:     # multiplicative decrease
-                    ag.step(np.zeros_like(ag.target_bw))
-                self.plan = self._replan()
-                step_fn = self._get_step()
-            ewma = 0.9 * ewma + 0.1 * dt
+            # ---- straggler trigger (controller-owned EWMA + AIMD MD) ----
+            if self.controller is not None:
+                if self.controller.observe_step_time(dt, step=step) \
+                        is not None:
+                    step_fn = self._get_step()
             # ---- logging -------------------------------------------------
             rec = {"step": step, "loss": float(out["loss"]),
                    "grad_norm": float(out["grad_norm"]), "time": dt}
             self.history.append(rec)
-            # ---- WANify re-plan -----------------------------------------
-            if self.multi_pod and self.loop.sync == "wanify" and \
-                    self.sim is not None and \
-                    (step + 1) % self.loop.replan_every == 0:
-                self.sim.advance()
+            # ---- WANify periodic re-plan --------------------------------
+            if self.controller is not None and \
+                    self.controller.replan_due(step):
                 skw = pod_skew_weights(np.asarray(batch["tokens"]),
                                        self.n_pods, self.cfg.vocab) \
                     if self.loop.use_skew_weights else None
-                new_plan = self._replan(skew_w=skw)
-                if new_plan.signature() != self.plan.signature():
-                    self.plan = new_plan
+                if self.controller.maybe_replan(step, skew_w=skw) \
+                        is not None:
                     step_fn = self._get_step()
-                    self.events.append(f"replanned at step {step}")
             # ---- checkpoint ----------------------------------------------
             if self.loop.ckpt_dir and (step + 1) % self.loop.ckpt_every == 0:
                 if writer is not None:
@@ -222,8 +200,10 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def rescale(self, new_mesh) -> "Trainer":
-        """Elastic scale: new pod count; RF covers the new cluster size."""
+        """Elastic scale: new pod count; the controller re-plans for the
+        new cluster size (§3.3.2) and checkpoints are mesh-agnostic."""
         t = Trainer(self.cfg, new_mesh, self.dcfg, self.loop, self.opt,
                     self.sim, self.predictor)
-        t.events = self.events + [f"rescaled to {dict(new_mesh.shape)}"]
+        # prepend in place: t.events is shared with t.controller's log
+        t.events[:0] = self.events + [f"rescaled to {dict(new_mesh.shape)}"]
         return t

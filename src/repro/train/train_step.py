@@ -14,8 +14,7 @@ memory; optional wire compression (SAGQ analogue) rides the WAN hop.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -54,3 +54,10 @@ class SnapshotMonitor:
         X = assemble_features(N, snap, mem, cpu, retr, self.sim.dist)
         return X, {"snapshot_bw": snap, "mem_util": mem, "cpu_load": cpu,
                    "retrans": retr, "dist": self.sim.dist}
+
+    def measure(self, conns: Optional[np.ndarray] = None) -> np.ndarray:
+        """Lightweight monitored BW at the given connection matrix — the
+        iftop analogue the AIMD agents consume (§3.2.2). Pass the
+        connection matrix actually in force; an idle default-of-ones
+        measurement describes a traffic regime the workload is not in."""
+        return self.sim.measure_snapshot(conns)

@@ -1,0 +1,244 @@
+"""WANify control plane (`repro.control`): plan cache, AIMD feedback at
+the in-force connection matrix, elastic rescale, serve-side replanning,
+and the trigger surface shared by training and serving."""
+import numpy as np
+import pytest
+
+from repro.control import (ControllerConfig, WanifyController,
+                           offset_schedule, pick_bits, wire_decode,
+                           wire_encode)
+from repro.core.plan import WanPlan
+from repro.core.predictor import SnapshotPredictor
+from repro.wan.simulator import WanSimulator
+
+VALID_BITS = (8, 16, 32)
+
+
+def quiet_sim(seed=3, **kw):
+    """Deterministic network: no fluctuation / observation noise."""
+    return WanSimulator(seed=seed, fluct_sigma=0.0, snapshot_sigma=0.0,
+                        runtime_sigma=0.0, **kw)
+
+
+def make_controller(n_pods=4, seed=3, sim=None, **cfg):
+    return WanifyController(sim=sim or quiet_sim(seed),
+                            predictor=SnapshotPredictor(), n_pods=n_pods,
+                            cfg=ControllerConfig(**cfg))
+
+
+# ----------------------------------------------------------------------
+# (a) plan cache: identical signature => no new jit entry
+# ----------------------------------------------------------------------
+def test_plan_cache_no_rebuild_on_identical_signature():
+    ctl = make_controller()
+    builds = []
+
+    def build(plan):
+        builds.append(plan.signature())
+        return ("compiled", plan.signature())
+
+    first = ctl.compiled(("train", True), build)
+    assert len(builds) == 1 and len(ctl.plan_cache) == 1
+
+    # a replan that oscillates back to a structurally-equal plan: new
+    # WanPlan object, same signature -> the cache must hit
+    ctl.plan = WanPlan(n_pods=ctl.plan.n_pods, conns=ctl.plan.conns,
+                       pred_bw=ctl.plan.pred_bw,
+                       compress_bits=ctl.plan.compress_bits)
+    again = ctl.compiled(("train", True), build)
+    assert again is first
+    assert len(builds) == 1 and len(ctl.plan_cache) == 1
+
+    # across real replans the cache grows exactly one entry per distinct
+    # signature, never re-lowering a seen plan
+    for _ in range(4):
+        ctl.replan()
+        ctl.compiled(("train", True), build)
+    assert len(builds) == len(set(builds))
+    assert len(ctl.plan_cache) == len(set(builds))
+
+
+def test_plan_cache_distinguishes_extra_key():
+    ctl = make_controller()
+    a = ctl.compiled(("compress",), lambda p: object())
+    b = ctl.compiled(("no-compress",), lambda p: object())
+    assert a is not b and len(ctl.plan_cache) == 2
+
+
+# ----------------------------------------------------------------------
+# (b) AIMD feedback measured at the CURRENT connection matrix
+# ----------------------------------------------------------------------
+def test_aimd_feedback_uses_current_conns():
+    ctl = make_controller(n_pods=4)
+    seen = []
+    orig = ctl.sim.measure_snapshot
+
+    def spy(conns=None):
+        seen.append(None if conns is None else np.asarray(conns).copy())
+        return orig(conns)
+
+    ctl.sim.measure_snapshot = spy
+    in_force = ctl.current_conns()          # agents' post-init matrix
+    assert (in_force[:4, :4] != np.ones((4, 4))).any(), \
+        "agents should have adapted away from all-ones"
+    ctl.replan()
+    # every measurement of this replan (snapshot capture AND the AIMD
+    # monitored-BW feed) happened at the in-force matrix, never at the
+    # idle all-ones default
+    assert len(seen) >= 2
+    for conns in seen:
+        assert conns is not None
+        np.testing.assert_array_equal(conns, in_force)
+
+
+def test_agents_adapt_within_global_bounds():
+    ctl = make_controller(n_pods=4)
+    for _ in range(5):
+        ctl.sim.advance()
+        ctl.replan()
+    for ag in ctl._agents:
+        assert (ag.cons >= ag.min_cons).all()
+        assert (ag.cons <= ag.max_cons).all()
+
+
+# ----------------------------------------------------------------------
+# (c) elastic rescale (§3.3.2)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("new_pods", [2, 5, 8])
+def test_rescale_produces_valid_plan(new_pods):
+    ctl = make_controller(n_pods=3)
+    plan = ctl.rescale(new_pods)
+    assert plan.n_pods == new_pods
+    assert len(plan.conns) == new_pods
+    assert all(len(row) == new_pods for row in plan.conns)
+    assert all(v >= 1 for row in plan.conns for v in row)
+    assert all(b in VALID_BITS for b in plan.compress_bits)
+    assert ctl.plan is plan
+    sched = offset_schedule(plan)
+    assert [s["offset"] for s in sched] == list(range(1, new_pods))
+
+
+def test_rescale_beyond_monitored_cluster_rejected():
+    ctl = make_controller(n_pods=2)
+    with pytest.raises(ValueError):
+        ctl.rescale(ctl.sim.N + 1)
+
+
+# ----------------------------------------------------------------------
+# (d) serve-side replanning: a degraded link changes the migration plan
+# ----------------------------------------------------------------------
+def test_engine_replan_adapts_migration_schedule():
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import registry
+    from repro.serve.engine import Engine, ServeConfig
+
+    sim = quiet_sim(seed=3)
+    ctl = make_controller(n_pods=4, sim=sim)
+    cfg = reduced(get_config("qwen3-4b"))
+    params = registry.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(batch=2, s_max=32),
+                 controller=ctl)
+    before = eng.migration_schedule()
+
+    # a trans-pacific cable cut: the strongest pod link collapses 50x
+    off = ~np.eye(4, dtype=bool)
+    i, j = divmod(int(np.argmax(np.where(off, sim.base[:4, :4], 0.0))), 4)
+    sim.base[i, j] *= 0.02
+    sim.base[j, i] *= 0.02
+    plan = eng.replan()
+
+    assert plan is eng.plan and plan is ctl.plan
+    after = eng.migration_schedule()
+    assert after != before, (before, after)
+    # the degraded pair's offset class carries the adaptation: fewer
+    # wire bits for the collapsed link (chunks may move either way —
+    # AIMD multiplicative decrease can cut connections under congestion)
+    o = (j - i) % 4
+    cls_b = next(s for s in before if s["offset"] == o)
+    cls_a = next(s for s in after if s["offset"] == o)
+    assert cls_a["bits"] <= cls_b["bits"]
+    assert cls_a != cls_b
+
+
+def test_engine_without_controller_cannot_replan():
+    # replan() must not silently no-op when no control plane is attached
+    from repro.serve.engine import Engine
+    eng = Engine.__new__(Engine)
+    eng.controller, eng.plan = None, None
+    with pytest.raises(RuntimeError):
+        Engine.replan(eng)
+    with pytest.raises(RuntimeError):
+        Engine.migration_schedule(eng)
+
+
+# ----------------------------------------------------------------------
+# Triggers and event log
+# ----------------------------------------------------------------------
+def test_straggler_trigger_decreases_and_replans():
+    ctl = make_controller(n_pods=4, straggler_factor=2.0)
+    assert ctl.observe_step_time(1.0, step=0) is None     # seeds the EWMA
+    plan = ctl.observe_step_time(10.0, step=1)            # 10x slower
+    assert plan is not None and plan is ctl.plan
+    assert any("straggler at step 1" in e for e in ctl.events)
+    # multiplicative decrease ran before the replan rebuilt the bounds
+    assert len(ctl.record) >= 2
+    assert ctl.record[-1]["reason"] == "straggler"
+
+
+def test_periodic_trigger_cadence_and_signature_gate():
+    ctl = make_controller(n_pods=4, replan_every=5)
+    assert not ctl.replan_due(0)
+    assert ctl.replan_due(4)
+    assert ctl.maybe_replan(0) is None                    # not due
+    n_replans = len(ctl.record)
+    out = ctl.maybe_replan(4)                             # due
+    assert len(ctl.record) == n_replans + 1
+    if out is not None:                                   # signature moved
+        assert any("replanned at step 4" in e for e in ctl.events)
+
+
+def test_topology_change_resets_adaptation():
+    ctl = make_controller(n_pods=4)
+    ctl.replan()
+    old_agents = ctl._agents
+    ctl.topology_changed()
+    assert ctl._agents is not old_agents
+    assert ctl.record[-1]["reason"] == "topology"
+
+
+def test_event_log_shared_with_consumer():
+    events = []
+    ctl = WanifyController(sim=quiet_sim(), predictor=SnapshotPredictor(),
+                           n_pods=4, events=events)
+    ctl.observe_step_time(1.0, step=0)
+    ctl.observe_step_time(50.0, step=1)
+    assert ctl.events is events and len(events) > 0
+
+
+# ----------------------------------------------------------------------
+# schedule.py public API
+# ----------------------------------------------------------------------
+def test_wire_codec_roundtrip_scalar_and_sliced():
+    import jax.numpy as jnp
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 3, (4, 64)),
+                    jnp.float32)
+    for bits in VALID_BITS:
+        enc, scale = wire_encode(x, bits)
+        dec = wire_decode(enc, scale, x.dtype, bits)
+        assert dec.shape == x.shape
+        tol = {32: 0.0, 16: 0.05, 8: 0.1}[bits]
+        assert float(jnp.max(jnp.abs(dec - x))) <= tol * 3 + 1e-6
+        # per-pod-slice scales: one scale per leading-dim slice
+        enc_s, scale_s = wire_encode(x, bits, axes=(1,))
+        if bits == 8:
+            assert scale_s.shape == (4, 1)
+        dec_s = wire_decode(enc_s, scale_s, x.dtype, bits)
+        assert float(jnp.max(jnp.abs(dec_s - x))) <= tol * 3 + 1e-6
+
+
+def test_pick_bits_reexported():
+    assert pick_bits(100.0) == 8
+    assert pick_bits(400.0) == 16
+    assert pick_bits(5000.0) == 32

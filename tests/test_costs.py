@@ -1,5 +1,5 @@
 """Monitoring cost model (Eq. 1 / Table 2): ~96% savings claim."""
-from repro.core.plan import monitoring_cost, prediction_cost
+from repro.core.plan import monitoring_cost
 from repro.wan.monitor import annual_costs
 
 

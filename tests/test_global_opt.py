@@ -1,9 +1,7 @@
 """Global optimization (Eq. 2-3) — paper worked example + invariants."""
 import numpy as np
-import pytest
 
 from repro.core.global_opt import global_optimize
-from repro.core.relations import infer_dc_relations
 
 PAPER_BW = np.array([[1000, 400, 120],
                      [380, 1000, 130],

@@ -1,7 +1,6 @@
 """Local AIMD optimization (§3.2.2) — paper worked example + dynamics."""
 import numpy as np
 
-from repro.core.global_opt import GlobalPlan
 from repro.core.local_opt import AimdAgent
 
 

@@ -1,12 +1,15 @@
 """Hypothesis property tests over system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.global_opt import global_optimize
 from repro.core.local_opt import AimdAgent
 from repro.core.plan import WanPlan, pick_bits
 from repro.core.relations import infer_dc_relations
-from repro.core.wansync import offset_schedule
+from repro.control.schedule import offset_schedule
 from repro.wan.simulator import WanSimulator
 
 bw_matrix = st.integers(2, 6).flatmap(

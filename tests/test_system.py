@@ -9,8 +9,8 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from repro import compat
 from repro.configs import get_config
 from repro.configs.base import reduced
 from repro.data.pipeline import DataConfig
@@ -19,8 +19,7 @@ from repro.train.optimizer import AdamWConfig
 
 
 def _mesh1():
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((1,), ("data",))
 
 
 def test_training_reduces_loss(tmp_path):
@@ -66,11 +65,11 @@ _MULTIPOD_SCRIPT = textwrap.dedent("""
     import jax, numpy as np
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.core.wansync import wan_allreduce, psum_allreduce
     from repro.core.plan import WanPlan
 
-    mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pod", "data"))
     plan = WanPlan(
         n_pods=4,
         conns=tuple(tuple(6 if abs(i - j) % 4 > 1 else 2 for j in range(4))
@@ -86,8 +85,11 @@ _MULTIPOD_SCRIPT = textwrap.dedent("""
         local = jax.tree.map(lambda x: x * (r + 1.0), t)
         return wan_allreduce(local, plan, compress=False, mean=True)
 
-    sm = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
-                       axis_names={"pod"}, check_vma=False)
+    # fully-manual axes: jax 0.4.x XLA-CPU cannot partition a partially-
+    # manual mesh (PartitionId unimplemented); inputs are replicated so
+    # making "data" manual too is value-identical here.
+    sm = shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                   axis_names={"pod", "data"}, check_vma=False)
     out = jax.jit(sm)(tree)
     exp = np.mean([r + 1 for r in range(4)])
     for k in tree:
@@ -118,8 +120,8 @@ _DRYRUN_SCRIPT = textwrap.dedent("""
     import repro.launch.dryrun as dr
 
     # shrink the production mesh to the 8 host devices: same axes/logic
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     import repro.configs as C
     cfg = get_config("llama3-8b")
     # patch a tiny config into the registry path used by run_cell
