@@ -1,0 +1,53 @@
+"""Scenario benchmark — runs every named scenario from
+repro.scenarios.library through the closed loop and emits one JSON
+document of per-scenario throughput / replan / compile-cache metrics.
+
+Run:  PYTHONPATH=src python benchmarks/scenarios_bench.py [--out FILE]
+
+Output schema (per scenario):
+  {"scenario": ..., "seed": ..., "steps": ..., "replans": {reason: n},
+   "throughput_mbps": ..., "achieved_min_mbps": ...,
+   "achieved_mean_mbps": ..., "distinct_plans": ...,
+   "cache_builds": ..., "cache_hits": ..., "wall_s": ...}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.scenarios import get_scenario, run_scenario, scenario_names
+
+SEED = 0
+
+
+def bench_scenarios(seed: int = SEED):
+    rows = []
+    for name in scenario_names():
+        t0 = time.time()
+        res = run_scenario(get_scenario(name), seed=seed)
+        row = res.summary()
+        row["wall_s"] = round(time.time() - t0, 3)
+        rows.append(row)
+        sys.stderr.write(f"[scenarios] {name} done in {row['wall_s']}s\n")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--out", type=str, default=None,
+                    help="write JSON here instead of stdout")
+    args = ap.parse_args()
+    doc = json.dumps(bench_scenarios(args.seed), indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+        sys.stderr.write(f"[scenarios] wrote {args.out}\n")
+    else:
+        print(doc)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,9 +19,13 @@ controller owns it once, shared by training, serving, and planning:
     paper §3.3.2) and on-demand (:meth:`replan`, e.g. serve-side);
   * plan cache   — :meth:`compiled` memoizes consumer-built artifacts
     (jitted steps, lowered migrations) on ``WanPlan.signature()`` so
-    oscillating plans never recompile;
+    oscillating plans never recompile; `cache_builds`/`cache_hits`
+    count lowerings vs reuses;
   * event log    — human-readable `events` (shareable with a consumer's
-    own log) plus a structured `record` of every replan.
+    own log) plus a structured `record` of every replan, mirrored to an
+    optional `trace_hook` callable (the scenario engine's tap); the
+    last predicted matrix is kept on `last_pred` so a harness can line
+    up predicted vs achieved BW per step.
 """
 from __future__ import annotations
 
@@ -42,6 +46,8 @@ class ControllerConfig:
     max_conns: int = 8               # M, per-host connection budget
     replan_every: int = 20           # periodic trigger cadence (steps)
     straggler_factor: float = 2.5    # step slower than factor x EWMA
+    straggler_cooldown: int = 0      # min steps between straggler replans
+    #                                  (0 = trigger on every slow step)
     ewma_alpha: float = 0.1          # step-time EWMA smoothing
     advance_sim: bool = True         # advance link fluctuation on the
     #                                  periodic trigger (simulated time)
@@ -53,7 +59,9 @@ class WanifyController:
 
     def __init__(self, sim: WanSimulator, predictor: Any, n_pods: int,
                  cfg: Optional[ControllerConfig] = None,
-                 events: Optional[List[str]] = None):
+                 events: Optional[List[str]] = None,
+                 trace_hook: Optional[Callable[[Dict[str, Any]], None]]
+                 = None):
         self.sim = sim
         self.predictor = predictor
         self.n_pods = int(n_pods)
@@ -62,9 +70,15 @@ class WanifyController:
         # a consumer may hand in its own log list; both append to it
         self.events: List[str] = events if events is not None else []
         self.record: List[Dict[str, Any]] = []
+        self.trace_hook = trace_hook
         self.plan_cache: Dict[Tuple, Any] = {}
+        self.cache_builds = 0
+        self.cache_hits = 0
+        self.last_pred: Optional[np.ndarray] = None
         self._agents: Optional[List[AimdAgent]] = None
         self._ewma: Optional[float] = None
+        self._last_straggler: Optional[int] = None
+        self._obs_count = 0
         self.plan = self.replan(reason="init")
 
     # ------------------------------------------------------------------
@@ -95,9 +109,10 @@ class WanifyController:
                             for i in range(self.n_pods)]
         else:
             # fine-tune inside the new global bounds against BW monitored
-            # at the connection matrix actually in force
-            monitored = self.monitor.measure(conns)[:self.n_pods,
-                                                    :self.n_pods]
+            # at the connection matrix actually in force — the capture
+            # above already measured at `conns`, so reuse it instead of
+            # paying a second waterfill + noise draw
+            monitored = raw["snapshot_bw"][:self.n_pods, :self.n_pods]
             for i, ag in enumerate(self._agents):
                 ag.min_cons, ag.max_cons = gp.min_cons[i], gp.max_cons[i]
                 ag.min_bw, ag.max_bw = gp.min_bw[i], gp.max_bw[i]
@@ -112,8 +127,15 @@ class WanifyController:
             compress_bits=WanPlan.from_global(gp).compress_bits,
         )
         self.plan = plan
-        self.record.append({"reason": reason, "step": step,
-                            "signature": plan.signature()})
+        self.last_pred = pred
+        off = ~np.eye(self.n_pods, dtype=bool)
+        rec = {"reason": reason, "step": step,
+               "signature": plan.signature(), "n_pods": self.n_pods,
+               "pred_min": float(pods[off].min()) if off.any() else 0.0,
+               "pred_mean": float(pods[off].mean()) if off.any() else 0.0}
+        self.record.append(rec)
+        if self.trace_hook is not None:
+            self.trace_hook(rec)
         return plan
 
     # ------------------------------------------------------------------
@@ -145,14 +167,20 @@ class WanifyController:
         """Straggler trigger: feed per-step wall time; a step slower
         than `straggler_factor` x EWMA forces an AIMD multiplicative
         decrease on every agent plus an immediate replan."""
+        eff_step = self._obs_count if step is None else step
+        self._obs_count += 1
         if self._ewma is None:
             self._ewma = dt
         plan = None
-        if dt > self.cfg.straggler_factor * self._ewma:
-            self.events.append(f"straggler at step {step} ({dt:.2f}s)")
+        in_cooldown = (self._last_straggler is not None and
+                       eff_step - self._last_straggler
+                       < self.cfg.straggler_cooldown)
+        if dt > self.cfg.straggler_factor * self._ewma and not in_cooldown:
+            self.events.append(f"straggler at step {eff_step} ({dt:.2f}s)")
+            self._last_straggler = eff_step
             for ag in self._agents or []:
                 ag.step(np.zeros_like(ag.target_bw))
-            plan = self.replan(reason="straggler", step=step)
+            plan = self.replan(reason="straggler", step=eff_step)
         self._ewma = (1 - self.cfg.ewma_alpha) * self._ewma \
             + self.cfg.ewma_alpha * dt
         return plan
@@ -163,6 +191,7 @@ class WanifyController:
         AIMD bounds no longer describe the network."""
         self._agents = None
         self._ewma = None
+        self._last_straggler = None
         self.events.append("topology changed; replanning from scratch")
         return self.replan(reason="topology")
 
@@ -177,6 +206,7 @@ class WanifyController:
         self.n_pods = int(n_pods)
         self._agents = None
         self._ewma = None        # step times change scale with pod count
+        self._last_straggler = None
         self.events.append(f"rescaled controller to {n_pods} pods")
         return self.replan(skew_w=skew_w, reason=f"rescale:{n_pods}")
 
@@ -189,5 +219,8 @@ class WanifyController:
         compiled artifact instead of re-lowering."""
         key = (self.plan.signature(),) + tuple(extra_key)
         if key not in self.plan_cache:
+            self.cache_builds += 1
             self.plan_cache[key] = build(self.plan)
+        else:
+            self.cache_hits += 1
         return self.plan_cache[key]

@@ -1,0 +1,24 @@
+"""repro.scenarios — scripted WAN dynamics + deterministic replay.
+
+A scenario is a timeline of WAN events (`events.py` DSL) driven
+through the full closed loop by `engine.py`; `library.py` names ~10
+timelines reproducing the paper's §5 settings, and `trace.py` defines
+the per-step trace whose canonical JSON is byte-identical across
+same-seed replays. See DESIGN.md ("The scenario engine").
+"""
+from repro.scenarios.engine import (ScenarioEngine, ScenarioSpec,
+                                    run_scenario)
+from repro.scenarios.events import (CrossTraffic, DiurnalCycle, LinkDegrade,
+                                    LinkRestore, ProviderShift, Rescale,
+                                    SkewRamp, Straggler, at, flap)
+from repro.scenarios.library import SCENARIOS, get_scenario, scenario_names
+from repro.scenarios.trace import (ScenarioResult, ScenarioTrace, StepTrace,
+                                   sig_hash)
+
+__all__ = [
+    "ScenarioEngine", "ScenarioSpec", "run_scenario",
+    "ScenarioResult", "ScenarioTrace", "StepTrace", "sig_hash",
+    "SCENARIOS", "get_scenario", "scenario_names",
+    "at", "flap", "LinkDegrade", "LinkRestore", "CrossTraffic",
+    "DiurnalCycle", "Rescale", "ProviderShift", "SkewRamp", "Straggler",
+]

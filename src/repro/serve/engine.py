@@ -59,18 +59,32 @@ class Engine:
         self.pos = 0
         # WANify control plane for KV-cache migration plans
         self.controller = controller
-        self.plan = plan if plan is not None else \
-            (controller.plan if controller is not None else None)
+        self._static_plan = plan
+
+    @property
+    def plan(self) -> Optional[WanPlan]:
+        """The migration plan in force — always the shared controller's
+        latest (never a stale snapshot), unless an explicit static plan
+        was handed in."""
+        if self._static_plan is not None:
+            return self._static_plan
+        return self.controller.plan if self.controller is not None else None
+
+    @plan.setter
+    def plan(self, value: Optional[WanPlan]) -> None:
+        self._static_plan = value
 
     # ------------------------------------------------------------------
     # WANify control plane hooks
     # ------------------------------------------------------------------
     def replan(self, skew_w: Optional[np.ndarray] = None) -> WanPlan:
         """Run one control-loop iteration (snapshot -> prediction ->
-        optimization -> AIMD) and adopt the resulting migration plan."""
+        optimization -> AIMD) and adopt the resulting migration plan
+        (dropping any static override in favor of the live controller)."""
         if self.controller is None:
             raise RuntimeError("Engine.replan() needs a WanifyController")
-        self.plan = self.controller.replan(skew_w=skew_w, reason="serve")
+        self._static_plan = None
+        self.controller.replan(skew_w=skew_w, reason="serve")
         return self.plan
 
     def migration_schedule(self) -> List[Dict[str, int]]:

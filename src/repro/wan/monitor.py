@@ -41,8 +41,11 @@ def annual_costs(n_dcs: int) -> Dict[str, float]:
 
 @dataclass
 class SnapshotMonitor:
-    """Captures one cheap snapshot of the cluster (1-second features)."""
+    """Captures one cheap snapshot of the cluster (1-second features).
+    The last raw capture is kept on `last_raw` so a trace harness can
+    line up what the controller saw against ground truth."""
     sim: WanSimulator
+    last_raw: Optional[Dict[str, np.ndarray]] = None
 
     def capture(self, conns: Optional[np.ndarray] = None
                 ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
@@ -52,8 +55,10 @@ class SnapshotMonitor:
         snap = self.sim.measure_snapshot(c)
         mem, cpu, retr = self.sim.host_metrics(c, bw=snap)
         X = assemble_features(N, snap, mem, cpu, retr, self.sim.dist)
-        return X, {"snapshot_bw": snap, "mem_util": mem, "cpu_load": cpu,
-                   "retrans": retr, "dist": self.sim.dist}
+        self.last_raw = {"snapshot_bw": snap, "mem_util": mem,
+                         "cpu_load": cpu, "retrans": retr,
+                         "dist": self.sim.dist}
+        return X, self.last_raw
 
     def measure(self, conns: Optional[np.ndarray] = None) -> np.ndarray:
         """Lightweight monitored BW at the given connection matrix — the

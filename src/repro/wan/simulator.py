@@ -22,6 +22,16 @@ Measurement modes (paper §2.2):
 
 Fluctuation follows an AR(1) log-normal per-link process ([38]'s
 minutes-scale predictability).
+
+Randomness is split into NAMED streams spawned from one seed
+(fluctuation / observation / host), so the same network state yields
+the same measurement regardless of call interleaving — the determinism
+contract the scenario replay harness (repro.scenarios) relies on.
+Scripted dynamics hook in through `set_link_factor` (per-link scripted
+degradation), `modulation` (global diurnal multiplier),
+`background_conns` (cross-traffic that contends in the water-filling
+but is never credited to the workload), and `set_provider_factor`
+(provider migration, §3.3.3).
 """
 from __future__ import annotations
 
@@ -46,33 +56,73 @@ class WanSimulator:
     fluct_rho: float = 0.9             # AR(1) coefficient
     snapshot_sigma: float = 0.08       # extra 1-second observation noise
     runtime_sigma: float = 0.015       # residual noise of 20 s averages
+    # observation noise symmetric across i->j / j->i (links are modelled
+    # symmetric in advance(); symmetric noise keeps a snapshot of a
+    # symmetric network symmetric — see test_symmetric_obs_noise_default)
+    symmetric_obs_noise: bool = True
     # per-DC VM multiplicity (association §3.3.3) and provider refactor
     vms_per_dc: Optional[np.ndarray] = None
     provider_factor: Optional[np.ndarray] = None
+    # cross-traffic [N,N] connection counts: contend in waterfill, never
+    # credited to the workload's achieved BW (scenario engine knob)
+    background_conns: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.N = len(self.regions)
-        self.rng = np.random.default_rng(self.seed)
+        # named streams spawned from one seed: measurement draws do not
+        # depend on how fluctuation/observation/host calls interleave
+        s_fluct, s_obs, s_host = np.random.SeedSequence(self.seed).spawn(3)
+        self.rng_fluct = np.random.default_rng(s_fluct)
+        self.rng_obs = np.random.default_rng(s_obs)
+        self.rng_host = np.random.default_rng(s_host)
         self.dist = topo.distance_matrix(self.regions)
+        self._rebuild_base()
+        self._fluct = np.zeros((self.N, self.N))   # log-space AR(1) state
+        self._link_factor = np.ones((self.N, self.N))  # scripted events
+        self.modulation = 1.0                      # scripted diurnal cycle
+
+    def _rebuild_base(self) -> None:
         self.base = topo.bw_single_matrix(self.regions)
         if self.provider_factor is not None:
             pf = np.sqrt(np.outer(self.provider_factor, self.provider_factor))
             off = ~np.eye(self.N, dtype=bool)
             self.base[off] = (self.base * pf)[off]
-        self._fluct = np.zeros((self.N, self.N))   # log-space AR(1) state
+
+    # ------------------------------------------------------------------
+    # Scripted dynamics (repro.scenarios event targets)
+    # ------------------------------------------------------------------
+    def set_link_factor(self, i: int, j: int, factor: float) -> None:
+        """Scripted symmetric degradation/restoration of one link
+        (factor 1.0 = nominal; links are modelled symmetric)."""
+        self._link_factor[i, j] = self._link_factor[j, i] = float(factor)
+
+    def set_provider_factor(self, pf: Optional[np.ndarray]) -> None:
+        """Provider migration (§3.3.3): rebuild base BW under new per-DC
+        provider factors."""
+        self.provider_factor = None if pf is None else np.asarray(pf, float)
+        self._rebuild_base()
+
+    def set_background(self, i: int, j: int, conns: float) -> None:
+        """Cross-traffic on link i->j (0 clears)."""
+        if self.background_conns is None:
+            self.background_conns = np.zeros((self.N, self.N))
+        self.background_conns[i, j] = float(conns)
 
     # ------------------------------------------------------------------
     def advance(self, steps: int = 1) -> None:
         """Advance the fluctuation process (call once per epoch/minute)."""
         for _ in range(steps):
-            eps = self.rng.normal(0.0, self.fluct_sigma, (self.N, self.N))
+            eps = self.rng_fluct.normal(0.0, self.fluct_sigma,
+                                        (self.N, self.N))
             eps = (eps + eps.T) / 2                     # symmetric links
             self._fluct = self.fluct_rho * self._fluct + \
                 np.sqrt(1 - self.fluct_rho ** 2) * eps
 
     def link_bw_now(self) -> np.ndarray:
-        """Current single-connection BW per link (with fluctuation)."""
-        return self.base * np.exp(self._fluct)
+        """Current single-connection BW per link (fluctuation x scripted
+        link factors x diurnal modulation)."""
+        return self.base * np.exp(self._fluct) * self._link_factor \
+            * self.modulation
 
     def _caps(self):
         vms = self.vms_per_dc if self.vms_per_dc is not None \
@@ -111,6 +161,11 @@ class WanSimulator:
         np.fill_diagonal(c, 0.0)
         if active is not None:
             c = c * active
+        own = c.copy()                             # the workload's flows
+        if self.background_conns is not None:
+            bg = np.asarray(self.background_conns, np.float64).copy()
+            np.fill_diagonal(bg, 0.0)
+            c = c + np.maximum(bg, 0.0)            # cross-traffic contends
         w = self.rtt_weight()                      # per-connection weight
         cw = c * w                                 # aggregate pair weight
         per_conn_cap = single                      # one stream's ceiling
@@ -155,7 +210,7 @@ class WanSimulator:
             if not hit.any() and inc == 0.0:
                 break
             frozen |= hit
-        bw = rate * c
+        bw = rate * own              # cross-traffic BW is never credited
         np.fill_diagonal(bw, topo.INTRA_DC_BW)
         return bw
 
@@ -184,8 +239,11 @@ class WanSimulator:
         bw = self.waterfill(c, cap=cap)
         if noise > 0:
             off = ~np.eye(N, dtype=bool)
-            mult = np.exp(self.rng.normal(0, noise, (N, N)))
-            bw = np.where(off, bw * mult, bw)
+            eps = self.rng_obs.normal(0, noise, (N, N))
+            if self.symmetric_obs_noise:
+                # /sqrt(2) keeps the per-link marginal sd at `noise`
+                eps = (eps + eps.T) / np.sqrt(2.0)
+            bw = np.where(off, bw * np.exp(eps), bw)
         return bw
 
     def measure_runtime(self, conns: Optional[np.ndarray] = None,
@@ -210,13 +268,14 @@ class WanSimulator:
         total_in = c.sum(axis=0)
         total_out = c.sum(axis=1)
         mem_util = np.clip(0.15 + 0.02 * total_in +
-                           self.rng.normal(0, 0.02, self.N), 0.05, 0.98)
+                           self.rng_host.normal(0, 0.02, self.N), 0.05, 0.98)
         cpu_load = np.clip(0.10 + 0.015 * total_out +
-                           self.rng.normal(0, 0.02, self.N), 0.02, 0.98)
+                           self.rng_host.normal(0, 0.02, self.N), 0.02, 0.98)
         # retransmissions rise when a pair is squeezed below its solo BW
         solo = self.link_bw_now()
         squeeze = np.maximum(0.0, 1.0 - bw / np.maximum(solo * c, 1e-9))
         retrans = np.rint(squeeze * 40 +
-                          self.rng.poisson(1.0, (self.N, self.N))).astype(float)
+                          self.rng_host.poisson(1.0,
+                                                (self.N, self.N))).astype(float)
         np.fill_diagonal(retrans, 0)
         return mem_util, cpu_load, retrans

@@ -82,10 +82,10 @@ def test_aimd_feedback_uses_current_conns():
     assert (in_force[:4, :4] != np.ones((4, 4))).any(), \
         "agents should have adapted away from all-ones"
     ctl.replan()
-    # every measurement of this replan (snapshot capture AND the AIMD
-    # monitored-BW feed) happened at the in-force matrix, never at the
-    # idle all-ones default
-    assert len(seen) >= 2
+    # every measurement of this replan happened at the in-force matrix,
+    # never at the idle all-ones default (the snapshot capture doubles
+    # as the AIMD monitored-BW feed — one draw, same matrix)
+    assert len(seen) >= 1
     for conns in seen:
         assert conns is not None
         np.testing.assert_array_equal(conns, in_force)

@@ -62,7 +62,10 @@ def test_aimd_stays_in_bounds(m):
 @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8))
 @settings(max_examples=10, deadline=None)
 def test_waterfill_never_exceeds_caps(seed, n):
+    """Achieved BW never exceeds the per-connection ceiling, the
+    path-knee cap, or the NIC egress/ingress caps."""
     sim = WanSimulator(regions=WanSimulator().regions[:n], seed=seed)
+    sim.advance(seed % 5)                    # arbitrary fluctuation state
     rng = np.random.default_rng(seed)
     conns = rng.integers(0, 10, (n, n)).astype(float)
     np.fill_diagonal(conns, 0)
@@ -70,9 +73,43 @@ def test_waterfill_never_exceeds_caps(seed, n):
     off = ~np.eye(n, dtype=bool)
     single = sim.link_bw_now()
     assert (bw[off] <= np.maximum(conns, 1)[off] * single[off] * 1.01).all()
+    assert (bw[off] <= single[off] * sim.knee * 1.01).all()
     assert (np.where(off, bw, 0).sum(1) <= sim.nic_cap * 1.01).all()
     assert (np.where(off, bw, 0).sum(0) <= sim.nic_cap * 1.01).all()
     assert (bw[off] >= -1e-9).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_waterfill_idle_pairs_get_exactly_zero(seed, n):
+    sim = WanSimulator(regions=WanSimulator().regions[:n], seed=seed)
+    rng = np.random.default_rng(seed)
+    conns = rng.integers(0, 10, (n, n)).astype(float)
+    np.fill_diagonal(conns, 0)
+    bw = sim.waterfill(conns)
+    off = ~np.eye(n, dtype=bool)
+    assert (bw[off][conns[off] == 0] == 0.0).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8),
+       st.integers(0, 63), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_waterfill_monotone_in_own_connections(seed, n, pick, extra):
+    """Growing ONLY one pair's connection count never decreases that
+    pair's achieved BW (more aggregate weight in the fair share)."""
+    sim = WanSimulator(regions=WanSimulator().regions[:n], seed=seed)
+    sim.advance(seed % 5)
+    rng = np.random.default_rng(seed)
+    conns = rng.integers(0, 10, (n, n)).astype(float)
+    np.fill_diagonal(conns, 0)
+    i, j = divmod(pick % (n * n), n)
+    if i == j:
+        j = (j + 1) % n
+    before = sim.waterfill(conns)[i, j]
+    grown = conns.copy()
+    grown[i, j] += extra
+    after = sim.waterfill(grown)[i, j]
+    assert after >= before - max(1e-6 * before, 1e-6)
 
 
 @given(st.floats(1, 5000))

@@ -1,0 +1,239 @@
+"""Scenario integration tier: scripted WAN dynamics driven end-to-end
+through the closed loop (simulator -> monitor -> predictor -> global
+opt -> AIMD -> plan), with deterministic replay.
+
+Every test runs a named scenario from repro.scenarios.library and
+asserts controller behavior — not unit state, but what the control
+plane actually did under the scripted dynamics.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.scenarios import (ScenarioEngine, at, flap, get_scenario,
+                             run_scenario, scenario_names)
+from repro.scenarios.events import LinkDegrade, LinkRestore, Straggler
+
+
+@pytest.fixture(scope="module")
+def results():
+    """One deterministic run per (scenario, seed), shared module-wide."""
+    cache = {}
+
+    def get(name, seed=0):
+        if (name, seed) not in cache:
+            cache[(name, seed)] = run_scenario(get_scenario(name),
+                                               seed=seed)
+        return cache[(name, seed)]
+    return get
+
+
+# ----------------------------------------------------------------------
+# Determinism contract
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["congestion", "runtime_fluctuation"])
+def test_replay_byte_identical(name):
+    """Two fresh runs with the same seed produce byte-identical traces —
+    including the noisy scenario, because all draws come from the
+    simulator's named RNG streams."""
+    a = run_scenario(get_scenario(name), seed=3).trace.to_json()
+    b = run_scenario(get_scenario(name), seed=3).trace.to_json()
+    assert a.encode() == b.encode()
+
+
+def test_different_seeds_diverge(results):
+    a = results("runtime_fluctuation", seed=0).trace
+    b = results("runtime_fluctuation", seed=1).trace
+    assert a.to_json() != b.to_json()
+
+
+def test_measurement_interleaving_does_not_change_replay():
+    """The RNG-stream split in action: an extra host_metrics draw does
+    not shift subsequent observation noise, so a consumer polling extra
+    metrics cannot perturb the replay."""
+    from repro.wan.simulator import WanSimulator
+    c = np.ones((8, 8))
+    s1 = WanSimulator(seed=5)
+    s2 = WanSimulator(seed=5)
+    s2.host_metrics(c)                   # extra draw on the host stream
+    np.testing.assert_array_equal(s1.measure_snapshot(c),
+                                  s2.measure_snapshot(c))
+
+
+# ----------------------------------------------------------------------
+# Named scenarios: controller behavior under dynamics
+# ----------------------------------------------------------------------
+def test_steady_replans_are_periodic_only(results):
+    t = results("steady").trace
+    assert set(t.replan_reasons()) <= {"periodic"}
+    assert len(t.replan_steps()) >= 2
+    # in a quiet scenario the per-step monitor sample equals the
+    # achieved ground truth exactly — replan steps included
+    assert all(abs(s.monitored_mean - s.achieved_mean) < 1e-9
+               for s in t.steps)
+
+
+def test_congestion_exactly_one_straggler_replan(results):
+    """Cross-traffic burst squeezes a ring hop: the step time spikes,
+    the straggler trigger fires once (the cooldown outlasts the burst),
+    and nothing else replans."""
+    t = results("congestion").trace
+    reasons = t.replan_reasons()
+    assert reasons.count("straggler") == 1
+    assert set(reasons) == {"straggler"}
+    trigger = t.replan_steps("straggler")[0]
+    assert 10 <= trigger < 15                 # inside the burst window
+    # the burst visibly squeezed the achieved BW on the ground truth
+    before = t.steps[9].achieved_min
+    during = min(s.achieved_min for s in t.steps[10:15])
+    assert during < 0.5 * before
+
+
+def test_congestion_aimd_backoff(results):
+    """The straggler replan carries an AIMD multiplicative decrease:
+    the in-force connection total drops at the trigger step."""
+    t = results("congestion").trace
+    k = t.replan_steps("straggler")[0]
+    assert t.steps[k].conns_total < t.steps[k - 1].conns_total
+
+
+def test_flap_recovery_hits_plan_cache(results):
+    """Degrade-then-restore oscillates the plan back to its pre-flap
+    signature: the third replan reuses the compiled artifact instead of
+    re-lowering (builds stay at 2, hits keep growing)."""
+    t = results("link_flap").trace
+    pre, down, post = t.steps[9], t.steps[15], t.steps[25]
+    assert down.plan_sig != pre.plan_sig      # flap changed the plan
+    assert post.plan_sig == pre.plan_sig      # recovery restored it
+    assert t.replan_reasons().count("topology") == 2
+    assert t.steps[-1].cache_builds == 2      # init + degraded, no 3rd
+    assert t.steps[-1].cache_hits > t.steps[19].cache_hits
+
+
+def test_straggler_injection_forces_aimd_decrease(results):
+    """An injected slow host (network untouched) trips the straggler
+    trigger; the AIMD multiplicative decrease shrinks the connection
+    matrix before the replan rebuilds the bounds."""
+    t = results("straggler_host").trace
+    assert t.replan_reasons().count("straggler") >= 1
+    k = t.replan_steps("straggler")[0]
+    assert k == 15                            # the injection step
+    assert t.steps[15].conns_total < t.steps[14].conns_total
+
+
+def test_elastic_rescale_join_and_leave(results):
+    t = results("elastic").trace
+    reasons = t.replan_reasons()
+    assert "rescale:6" in reasons and "rescale:4" in reasons
+    assert t.steps[11].n_pods == 4
+    assert t.steps[12].n_pods == 6            # join applied at step 12
+    assert t.steps[28].n_pods == 4            # leave applied at step 28
+    # plans stay internally consistent across the rescale
+    assert all(s.conns_total >= s.n_pods * (s.n_pods - 1)
+               for s in t.steps)
+
+
+def test_provider_shift_triggers_topology_replan(results):
+    t = results("provider_shift").trace
+    assert "topology" in t.replan_reasons()
+    assert t.replan_steps("topology") == [15]
+    # half the mesh lost capacity: the controller's own prediction sees
+    # a weaker network after the shift
+    assert t.steps[16].predicted_mean < 0.9 * t.steps[14].predicted_mean
+
+
+def test_skew_ramp_shifts_connection_budget():
+    """§3.3.1: as DC 0's skew weight ramps to 4x, the global optimizer
+    hands its pairs a larger share of the per-host connection budget
+    (the AIMD agents then oscillate inside those skewed bounds)."""
+    eng = ScenarioEngine(get_scenario("skew_ramp"), seed=0)
+    eng.run()
+    agents = eng.controller._agents
+    row0_budget = int(agents[0].max_cons.sum())
+    other_budget = int(agents[1].max_cons.sum())
+    assert row0_budget > other_budget
+    # before the ramp the budget was symmetric across DCs
+    first = eng.controller.record[0]["signature"][1]
+    rows = [sum(row) for row in first]
+    assert len(set(rows)) == 1
+
+
+def test_skew_ramp_composes_with_rescale():
+    """Scripted skew weights survive an elastic rescale in either
+    direction: the engine refits the skew vector to the new pod count
+    (new pods carry neutral weight) instead of handing the optimizer a
+    wrong-length w_s."""
+    from repro.scenarios import Rescale, ScenarioSpec, SkewRamp
+    spec = ScenarioSpec(
+        name="skew_then_rescale", steps=24,
+        events=(at(5, SkewRamp(weights=(4.0, 1.0, 1.0, 1.0), over=3)),
+                at(12, Rescale(n_pods=6)),
+                # a second ramp at the new width must reseed from the
+                # old 4-wide weights without a shape mismatch
+                at(14, SkewRamp(weights=(1.0, 1.0, 2.0, 2.0, 1.0, 1.0),
+                                over=2)),
+                at(18, Rescale(n_pods=3))),
+        sim_kwargs=dict(fluct_sigma=0.0, snapshot_sigma=0.0,
+                        runtime_sigma=0.0),
+        cfg_kwargs=dict(replan_every=4))
+    t = run_scenario(spec, seed=0).trace
+    assert t.steps[12].n_pods == 6 and t.steps[18].n_pods == 3
+    assert "rescale:6" in t.replan_reasons()
+
+
+def test_cable_cut_discovered_by_periodic_trigger(results):
+    """Silent degradation (no notify): the periodic trigger's snapshot
+    sees the collapse and the plan changes without any explicit event."""
+    t = results("cable_cut").trace
+    assert t.steps[20].predicted_min < 0.5 * t.steps[10].predicted_min
+    assert t.steps[25].plan_sig != t.steps[10].plan_sig
+
+
+def test_diurnal_achieved_bw_tracks_cycle(results):
+    """The ground-truth achieved BW follows the scripted sinusoid:
+    trough steps deliver less than peak steps."""
+    t = results("diurnal").trace
+    peak = np.mean([s.achieved_mean for s in t.steps[5:10]])
+    trough = np.mean([s.achieved_mean for s in t.steps[20:25]])
+    assert trough < 0.8 * peak
+
+
+# ----------------------------------------------------------------------
+# DSL, trace schema, summaries
+# ----------------------------------------------------------------------
+def test_event_dsl_construction():
+    e = at(7, LinkDegrade(("us-east", "ap-se"), 0.1))
+    assert e.step == 7 and e.event.factor == 0.1
+    pair = flap(10, ("us-east", "us-west"), 0.05, down_steps=5)
+    assert [t.step for t in pair] == [10, 15]
+    assert isinstance(pair[0].event, LinkDegrade)
+    assert isinstance(pair[1].event, LinkRestore)
+    # describe() strings are stable (they are part of the trace bytes)
+    assert Straggler(4.0, 2).describe() == \
+        "Straggler(slowdown=4.0, duration=2)"
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+def test_trace_schema_and_summary(results):
+    res = results("steady")
+    row = dataclasses.asdict(res.trace.steps[0])
+    for key in ("step", "events", "dt", "achieved_min", "achieved_mean",
+                "monitored_min", "monitored_mean", "predicted_min",
+                "predicted_mean", "plan_sig", "n_pods", "conns_total",
+                "replans", "cache_builds", "cache_hits"):
+        assert key in row
+    s = res.summary()
+    assert s["steps"] == len(res.trace.steps)
+    assert s["throughput_mbps"] > 0
+    assert s["cache_builds"] + s["cache_hits"] > 0
+
+
+def test_all_library_scenarios_build():
+    for name in scenario_names():
+        spec = get_scenario(name)
+        assert spec.steps > 0 and spec.name == name
