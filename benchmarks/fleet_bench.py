@@ -1,0 +1,105 @@
+"""Fleet benchmark — tick latency and min-BW fairness vs job count.
+
+Runs a fleet of 1..8 identical-slice-pattern jobs over one shared WAN
+and reports, per fleet size:
+
+  * mean/max tick wall time (the batched-RF + single-water-fill tick
+    should scale sublinearly in job count — one kernel launch and one
+    fill regardless of J);
+  * RF kernel launches (== ticks, fleet-size independent);
+  * per-job credited min-link BW plus Jain's fairness index over the
+    priority-normalized min BW (bw_j / w_j): 1.0 = perfectly
+    weighted-fair.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
+                         default_fleet_forest)
+from repro.wan.simulator import WanSimulator
+
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
+JOB_SIZES = (1, 2, 4, 8)
+TICKS = 6
+# priorities cycle 1/2/4 so every fleet size mixes weights
+PRIORITIES = (1.0, 2.0, 4.0)
+
+
+def build_fleet(n_jobs: int, forest, seed: int = 0) -> FleetController:
+    """`n_jobs` 4-DC jobs whose slices tile-and-overlap the 8-DC mesh."""
+    sim = WanSimulator(seed=seed, **QUIET)
+    jobs = tuple(
+        JobSpec(name=f"job{j}",
+                dcs=tuple((j + k) % 8 for k in range(4)),
+                priority=PRIORITIES[j % len(PRIORITIES)])
+        for j in range(n_jobs))
+    return FleetController(sim, BatchedRfPredictor(forest), m_total=8,
+                           jobs=jobs)
+
+
+def jain_index(xs: np.ndarray) -> float:
+    """Jain's fairness index: (sum x)^2 / (n * sum x^2), in (0, 1]."""
+    xs = np.asarray(xs, np.float64)
+    return float(xs.sum() ** 2 / (len(xs) * (xs ** 2).sum()))
+
+
+def bench_fleet(seed: int = 0, ticks: int = TICKS):
+    """One row per fleet size: latency scaling + weighted fairness."""
+    forest = default_fleet_forest()
+    rows = []
+    for n_jobs in JOB_SIZES:
+        fleet = build_fleet(n_jobs, forest, seed=seed)
+        fleet.tick()                              # warm the jit caches
+        wall = []
+        last = None
+        for _ in range(ticks):
+            t0 = time.perf_counter()
+            last = fleet.tick()
+            wall.append(time.perf_counter() - t0)
+        norm_min_bw = np.array([r["achieved_min"] / r["priority"]
+                                for r in last["jobs"]])
+        rows.append({
+            "n_jobs": n_jobs,
+            "ticks": ticks,
+            "tick_mean_ms": round(1e3 * float(np.mean(wall)), 2),
+            "tick_max_ms": round(1e3 * float(np.max(wall)), 2),
+            "kernel_calls": fleet.predictor.kernel_calls,
+            "min_bw_mbps": {r["name"]: round(r["achieved_min"], 1)
+                            for r in last["jobs"]},
+            "weighted_fairness_jain": round(jain_index(norm_min_bw), 3),
+        })
+        sys.stderr.write(f"[fleet] {n_jobs} jobs: "
+                         f"{rows[-1]['tick_mean_ms']} ms/tick\n")
+    base = rows[0]["tick_mean_ms"]
+    for row in rows:
+        row["tick_vs_1job"] = round(row["tick_mean_ms"] / base, 2)
+    return rows
+
+
+def main() -> None:
+    """CLI entry point; prints (or writes) one JSON document."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ticks", type=int, default=TICKS)
+    ap.add_argument("--out", type=str, default=None,
+                    help="write JSON here instead of stdout")
+    args = ap.parse_args()
+    doc = json.dumps(bench_fleet(args.seed, args.ticks), indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+        sys.stderr.write(f"[fleet] wrote {args.out}\n")
+    else:
+        print(doc)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,11 +5,13 @@ global optimization -> AIMD -> plan) and the plan -> wire lowering;
 training (`train/loop.py`), serving (`serve/engine.py`), and planning
 (`examples/wan_planning.py`) are thin consumers. See DESIGN.md.
 """
-from repro.control.controller import ControllerConfig, WanifyController
+from repro.control.controller import (BudgetEnvelope, ControllerConfig,
+                                      WanifyController)
 from repro.control.schedule import (offset_schedule, pick_bits,
                                     wire_decode, wire_encode)
 
 __all__ = [
+    "BudgetEnvelope",
     "ControllerConfig",
     "WanifyController",
     "offset_schedule",

@@ -41,8 +41,26 @@ from repro.wan.monitor import SnapshotMonitor
 from repro.wan.simulator import WanSimulator
 
 
+@dataclass(frozen=True)
+class BudgetEnvelope:
+    """Externally arbitrated resource envelope for one job (tenant).
+
+    A fleet controller (repro.fleet) computes one of these per job
+    before each arbitration epoch: `max_conns` replaces the job's own
+    per-host budget M for its next `global_optimize`, and `link_cap`
+    ([P,P] Mbps at the job's pod scale, np.inf = uncapped) joins the
+    §3.2.2 throttle so the job never targets more than its weighted
+    fair share of a contended link. A job without an envelope plans
+    exactly as before — the envelope is opt-in, not a new code path.
+    """
+    max_conns: int
+    link_cap: Optional[np.ndarray] = None
+
+
 @dataclass
 class ControllerConfig:
+    """Tuning knobs of one controller's triggers and budget."""
+
     max_conns: int = 8               # M, per-host connection budget
     replan_every: int = 20           # periodic trigger cadence (steps)
     straggler_factor: float = 2.5    # step slower than factor x EWMA
@@ -61,7 +79,8 @@ class WanifyController:
                  cfg: Optional[ControllerConfig] = None,
                  events: Optional[List[str]] = None,
                  trace_hook: Optional[Callable[[Dict[str, Any]], None]]
-                 = None):
+                 = None,
+                 envelope: Optional[BudgetEnvelope] = None):
         self.sim = sim
         self.predictor = predictor
         self.n_pods = int(n_pods)
@@ -75,6 +94,7 @@ class WanifyController:
         self.cache_builds = 0
         self.cache_hits = 0
         self.last_pred: Optional[np.ndarray] = None
+        self.envelope = envelope     # arbitrated budget (None = own M)
         self._agents: Optional[List[AimdAgent]] = None
         self._ewma: Optional[float] = None
         self._last_straggler: Optional[int] = None
@@ -93,17 +113,50 @@ class WanifyController:
                 c[i, :self.n_pods] = ag.cons
         return c
 
+    def set_envelope(self, envelope: Optional[BudgetEnvelope]) -> None:
+        """Adopt (or clear) an arbitrated budget/throttle envelope; it
+        takes effect at the next replan."""
+        self.envelope = envelope
+
     def replan(self, skew_w: Optional[np.ndarray] = None,
                reason: str = "explicit",
-               step: Optional[int] = None) -> WanPlan:
-        """Run one full loop iteration and return the resulting plan."""
+               step: Optional[int] = None, *,
+               capture: Optional[Dict[str, np.ndarray]] = None,
+               pred: Optional[np.ndarray] = None) -> WanPlan:
+        """Run one full loop iteration and return the resulting plan.
+
+        `capture` / `pred` let an outer orchestrator supply the raw
+        snapshot and the predicted-BW matrix instead of this controller
+        capturing/predicting itself — the fleet controller captures
+        every job first, stacks the feature rows, runs ONE batched RF
+        kernel launch, then hands each job its slice here. Both must be
+        at monitor scale ([N,N] of `self.sim`); AIMD feedback still
+        comes from the capture's snapshot.
+        """
         conns = self.current_conns()
-        _, raw = self.monitor.capture(conns)
-        pred = self.predictor.predict_matrix(
-            self.sim.N, raw["snapshot_bw"], raw["mem_util"],
-            raw["cpu_load"], raw["retrans"], raw["dist"])
+        if capture is None:
+            _, capture = self.monitor.capture(conns)
+        raw = capture
+        if pred is None:
+            pred = self.predictor.predict_matrix(
+                self.sim.N, raw["snapshot_bw"], raw["mem_util"],
+                raw["cpu_load"], raw["retrans"], raw["dist"])
         pods = pred[:self.n_pods, :self.n_pods]
-        gp = global_optimize(pods, M=self.cfg.max_conns, w_s=skew_w)
+        M = self.cfg.max_conns
+        link_cap = None
+        if self.envelope is not None:
+            M = int(self.envelope.max_conns)
+            if self.envelope.link_cap is not None:
+                link_cap = np.asarray(self.envelope.link_cap, np.float64)
+                if link_cap.shape != (self.n_pods, self.n_pods):
+                    # a mesh-scale cap silently prefix-sliced would cap
+                    # the WRONG links for any non-prefix DC slice
+                    raise ValueError(
+                        f"envelope link_cap shape {link_cap.shape} != "
+                        f"({self.n_pods}, {self.n_pods}); slice caps to "
+                        f"the controller's pod scale first (the fleet "
+                        f"does this via TenantView.extract)")
+        gp = global_optimize(pods, M=M, w_s=skew_w, link_cap=link_cap)
         if self._agents is None or len(self._agents) != self.n_pods:
             self._agents = [AimdAgent.from_plan(gp, i)
                             for i in range(self.n_pods)]
@@ -142,6 +195,7 @@ class WanifyController:
     # Triggers
     # ------------------------------------------------------------------
     def replan_due(self, step: int) -> bool:
+        """True when the periodic trigger fires at this step."""
         return (step + 1) % self.cfg.replan_every == 0
 
     def maybe_replan(self, step: int,

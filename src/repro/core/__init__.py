@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""repro.core — the paper's algorithms: plans, Eq. 2-3 global
+optimization (+ fleet budget splitting), §3.2.2 AIMD local agents,
+Algorithm-1 closeness inference, the §3.1 Random Forest and feature
+assembly, and the scheduled cross-pod all-reduce (wansync)."""

@@ -68,6 +68,7 @@ def _fit_tree(X: np.ndarray, y: np.ndarray, depth: int, min_leaf: int,
     leaf = np.zeros(2 ** depth, np.float32)
 
     def recurse(node: int, idx: np.ndarray, lvl: int):
+        """Grow the subtree at `node` over samples `idx`."""
         ys = y[idx]
         if lvl == depth:
             leaf[node - n_int] = float(ys.mean()) if len(ys) else 0.0
@@ -104,6 +105,10 @@ def _fit_tree(X: np.ndarray, y: np.ndarray, depth: int, min_leaf: int,
 # ----------------------------------------------------------------------
 @dataclass
 class RandomForest:
+    """Bootstrap-aggregated CART regressor in the complete-binary-tree
+    array layout (`feat`/`thr`/`leaf` stacked per tree) — the form the
+    jnp and Pallas inference backends consume directly."""
+
     n_trees: int = 100
     depth: int = 10
     min_leaf: int = 1
@@ -116,6 +121,9 @@ class RandomForest:
 
     def fit(self, X: np.ndarray, y: np.ndarray, warm: bool = False,
             n_new: Optional[int] = None) -> "RandomForest":
+        """Fit on bootstrap resamples; ``warm=True`` keeps existing
+        trees and appends `n_new` (default n_trees/4) trained on the
+        fresh data (§3.3.4 retraining)."""
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float32)
         rng = np.random.default_rng(self.seed if not warm else self.seed + 1)
@@ -173,4 +181,5 @@ class RandomForest:
         return float(np.mean(np.abs(p - y) <= tol_frac * np.maximum(y, 1.0)))
 
     def packed(self):
+        """The (feat, thr, leaf) arrays the jnp/Pallas kernels take."""
         return self.feat, self.thr, self.leaf

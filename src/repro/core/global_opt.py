@@ -23,6 +23,9 @@ from repro.core.relations import infer_dc_relations
 
 @dataclass
 class GlobalPlan:
+    """Eq. 2-3 output: per-pair connection RANGES plus the achievable
+    BW at each end of the range and the §3.2.2 throttle caps."""
+
     pred_bw: np.ndarray        # [N,N] predicted runtime BW (Mbps)
     dc_rel: np.ndarray         # [N,N] closeness indices
     min_cons: np.ndarray       # [N,N] int
@@ -33,6 +36,7 @@ class GlobalPlan:
 
     @property
     def n(self) -> int:
+        """Number of DCs the plan covers."""
         return self.pred_bw.shape[0]
 
 
@@ -59,13 +63,52 @@ def _refactor(N: int, r_vec: Optional[np.ndarray]) -> np.ndarray:
     return np.sqrt(r[:, None] * r[None, :])
 
 
+def split_budget(M: int, weights: np.ndarray) -> np.ndarray:
+    """Weighted fair-share of a per-host connection budget M across
+    tenants (fleet arbitration): largest-remainder apportionment of
+    ``M * w_j / sum(w)`` with a floor of one connection per tenant.
+
+    Invariants (tested): every share >= 1; ``sum(shares) <= M``
+    whenever ``M >= len(weights)`` (a host's connection table is never
+    oversubscribed); shares are monotone in weight.
+    """
+    w = np.asarray(weights, np.float64)
+    J = len(w)
+    if J == 0:
+        return np.zeros(0, np.int64)
+    w = np.maximum(w, 1e-9)
+    if M <= J:
+        return np.ones(J, np.int64)        # floor dominates; may equal M=J
+    quota = M * w / w.sum()
+    share = np.floor(quota).astype(np.int64)
+    frac = quota - share
+    # stable largest-remainder: ties break toward the earlier tenant
+    order = np.argsort(-frac, kind="stable")
+    share[order[:M - int(share.sum())]] += 1
+    share = np.maximum(share, 1)
+    while share.sum() > M:                 # repay the floor bumps
+        rich = int(np.argmax(share))
+        if share[rich] <= 1:
+            break
+        share[rich] -= 1
+    return share
+
+
 def global_optimize(pred_bw: np.ndarray, *, M: int = 8, D: float = 100.0,
                     w_s: Optional[np.ndarray] = None,
                     r_vec: Optional[np.ndarray] = None,
                     throttle_enabled: bool = True,
-                    dc_rel: Optional[np.ndarray] = None) -> GlobalPlan:
+                    dc_rel: Optional[np.ndarray] = None,
+                    link_cap: Optional[np.ndarray] = None) -> GlobalPlan:
     """pred_bw: [N,N] predicted runtime BW; M: per-host max parallel
-    connections; D: min significant BW difference (Algorithm 1 input)."""
+    connections; D: min significant BW difference (Algorithm 1 input).
+
+    `link_cap` is an externally arbitrated per-link BW ceiling [N,N]
+    (np.inf = uncapped) — a fleet controller's fair-share envelope. It
+    clamps `max_cons` (budget spent past the cap buys nothing) and
+    joins the §3.2.2 throttle, so a capped plan never targets more
+    than its credited share.
+    """
     bw = np.asarray(pred_bw, np.float64)
     N = bw.shape[0]
     rel = infer_dc_relations(bw, D) if dc_rel is None else np.asarray(dc_rel)
@@ -86,6 +129,17 @@ def global_optimize(pred_bw: np.ndarray, *, M: int = 8, D: float = 100.0,
     max_cons = np.clip(np.rint(max_cons), 1, 2 * M).astype(np.int64)
     max_cons = np.maximum(max_cons, min_cons)
 
+    if link_cap is not None:
+        lc = np.asarray(link_cap, np.float64)
+        capped = np.isfinite(lc) & ~np.eye(N, dtype=bool)
+        # connections past ceil(cap / unit_bw) cannot raise credited BW
+        cap_cons = np.ceil(lc / np.maximum(bw * rv, 1e-9))
+        cap_cons = np.maximum(np.where(capped, cap_cons, max_cons), 1)
+        cap_cons = np.minimum(cap_cons, 2 * M)     # int-safe ceiling
+        max_cons = np.minimum(max_cons, cap_cons.astype(np.int64))
+        max_cons = np.maximum(max_cons, 1)
+        min_cons = np.minimum(min_cons, max_cons)
+
     min_bw = bw * min_cons * rv
     max_bw = bw * max_cons * rv
 
@@ -99,4 +153,8 @@ def global_optimize(pred_bw: np.ndarray, *, M: int = 8, D: float = 100.0,
             rich = max_bw[i] > T
             rich[i] = False
             throttle[i][rich] = T
+    if link_cap is not None:
+        off = ~np.eye(N, dtype=bool)
+        throttle[off] = np.minimum(throttle, np.asarray(link_cap,
+                                                        np.float64))[off]
     return GlobalPlan(bw, rel, min_cons, max_cons, min_bw, max_bw, throttle)

@@ -46,6 +46,8 @@ class AimdAgent:
 
     @classmethod
     def from_plan(cls, plan: GlobalPlan, src: int) -> "AimdAgent":
+        """Build the agent for source DC `src` from a global plan's
+        ranges (copies, so later replans don't mutate a live agent)."""
         return cls(
             src=src,
             min_cons=plan.min_cons[src].copy(),

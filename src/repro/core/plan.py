@@ -17,6 +17,10 @@ from repro.core.global_opt import GlobalPlan
 
 @dataclass(frozen=True)
 class WanPlan:
+    """The frozen transfer plan consumers lower to the wire: per-pair
+    stream multiplicities, predicted BW, and per-hop wire bits.
+    `signature()` is the compile-cache identity."""
+
     n_pods: int
     conns: Tuple[Tuple[int, ...], ...]      # [P,P] stream multiplicity
     pred_bw: Tuple[Tuple[float, ...], ...]  # [P,P] Mbps (predicted runtime)
@@ -26,6 +30,9 @@ class WanPlan:
     @classmethod
     def from_global(cls, plan: GlobalPlan, *, use_max: bool = True,
                     bits_policy: Optional[dict] = None) -> "WanPlan":
+        """Freeze a GlobalPlan at one end of its range (max by
+        default — the paper starts AIMD from maximum throughput) and
+        pick per-hop compression bits from predicted BW."""
         cons = plan.max_cons if use_max else plan.min_cons
         P = plan.n
         bits = []
@@ -56,6 +63,7 @@ class WanPlan:
         return [max(1, self.conns[i][(i + 1) % P]) for i in range(P)]
 
     def max_ring_chunks(self) -> int:
+        """Largest hop multiplicity (sizes shared pipeline buffers)."""
         return max(self.ring_chunks()) if self.n_pods > 1 else 1
 
     def offset_bits(self) -> Tuple[int, ...]:

@@ -39,6 +39,8 @@ def assemble_features(n_dcs: int, snap_bw: np.ndarray, mem_util: np.ndarray,
 
 def matrix_from_pairs(vals: np.ndarray, N: int,
                       diag: float = 0.0) -> np.ndarray:
+    """Inverse of `assemble_features`'s row order: fold N*(N-1)
+    per-pair values back into an [N,N] matrix with `diag` filled in."""
     out = np.full((N, N), diag, np.float64)
     k = 0
     for i in range(N):
@@ -84,6 +86,9 @@ class BwPredictor:
                        retrans: np.ndarray, dist: np.ndarray,
                        intra_dc_bw: float = 10000.0,
                        backend: str = "numpy") -> np.ndarray:
+        """Snapshot features -> predicted runtime BW matrix [N,N]
+        (floored at 1 Mbps, `intra_dc_bw` on the diagonal); `backend`
+        picks numpy / jnp / pallas inference."""
         X = assemble_features(n_dcs, snap_bw, mem_util, cpu_load,
                               retrans, dist)
         if backend == "numpy":
@@ -117,6 +122,8 @@ class SnapshotPredictor:
                        retrans: np.ndarray, dist: np.ndarray,
                        intra_dc_bw: float = 10000.0,
                        backend: str = "numpy") -> np.ndarray:
+        """Return the snapshot itself as the 'prediction' (`backend`
+        is accepted for interface parity and ignored)."""
         out = np.maximum(np.asarray(snap_bw, np.float64).copy(), 1.0)
         np.fill_diagonal(out, intra_dc_bw)
         return out

@@ -59,6 +59,7 @@ def _leaf_wan_allreduce(g: jax.Array, sched, P: int, axis: str,
     seg = g.shape[0] // P
 
     def segment(x, idx):
+        """Slice one chunk segment out of a flat leaf."""
         return jax.lax.dynamic_slice_in_dim(x, idx * seg, seg, axis=0)
 
     # ---- reduce-scatter: after this, every pod holds the reduced segment
@@ -123,6 +124,7 @@ def wan_allreduce(tree: Any, plan: WanPlan, *, axis: str = "pod",
     scale = 1.0 / P if mean else 1.0
 
     def per_leaf(g):
+        """Apply the phase schedule to one gradient leaf."""
         out = _leaf_wan_allreduce(g, sched, P, axis, rank, compress)
         return out * scale if mean else out
 
@@ -135,6 +137,7 @@ def psum_allreduce(tree: Any, *, axis: str = "pod", mean: bool = True) -> Any:
     n = jax.lax.axis_size(axis)
 
     def per_leaf(g):
+        """Apply the phase schedule to one gradient leaf."""
         s = jax.lax.psum(g, axis)
         return s / n if mean else s
 
@@ -167,6 +170,7 @@ def wan_allreduce_batched(tree: Any, plan: WanPlan, *,
     out_scale = 1.0 / P if mean else 1.0
 
     def per_leaf(g):
+        """Apply the phase schedule to one gradient leaf."""
         # f32 accumulation only when lossy wire compression is active;
         # a blanket f32 copy of 236B-scale grads costs GiBs of HBM
         any_lossy = compress and any(ph["bits"] < 32 for ph in sched)
@@ -199,6 +203,7 @@ def psum_allreduce_batched(tree: Any, n_pods: int, *, mean: bool = True
     """Baseline in the batched formulation: mean over the pod dim
     broadcast back — XLA inserts its own all-reduce."""
     def per_leaf(g):
+        """Apply the phase schedule to one gradient leaf."""
         s = jnp.sum(g, axis=0, keepdims=True)
         if mean:
             s = s / n_pods

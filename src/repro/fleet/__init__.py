@@ -1,0 +1,29 @@
+"""repro.fleet — multi-job WAN sharing with batched RF prediction.
+
+N concurrent WANify jobs (each a full `WanifyController` over its own
+topology slice, skew weights, and priority) share ONE simulated WAN:
+an arbiter splits the per-host connection budget and contended-link
+capacity by priority-weighted fair share BEFORE each job plans, every
+job's RF inference batches into a single Pallas kernel launch per
+fleet tick, and achieved BW is credited per tenant from one fleet-wide
+water-fill. See DESIGN.md ("The fleet controller").
+"""
+from repro.fleet.arbiter import arbitrate, connection_budgets, link_shares
+from repro.fleet.controller import FleetController, FleetJob, JobSpec
+from repro.fleet.predictor import BatchedRfPredictor, default_fleet_forest
+from repro.fleet.scenario import (FLEET_SCENARIOS, FleetEngine,
+                                  FleetScenarioSpec, fleet_scenario_names,
+                                  get_fleet_scenario, run_fleet_scenario)
+from repro.fleet.tenant import TenantView
+from repro.fleet.trace import (FleetResult, FleetStepTrace, FleetTrace,
+                               tick_to_step)
+
+__all__ = [
+    "FleetController", "FleetJob", "JobSpec",
+    "TenantView",
+    "BatchedRfPredictor", "default_fleet_forest",
+    "arbitrate", "connection_budgets", "link_shares",
+    "FleetEngine", "FleetScenarioSpec", "run_fleet_scenario",
+    "FLEET_SCENARIOS", "get_fleet_scenario", "fleet_scenario_names",
+    "FleetResult", "FleetStepTrace", "FleetTrace", "tick_to_step",
+]

@@ -1,3 +1,3 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas TPU kernels (RF inference, wire quantization,
+SSD scan) with jnp oracles in `ref.py`; call through `ops.py`, which
+resolves interpret-vs-compiled per backend."""

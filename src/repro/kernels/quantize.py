@@ -60,6 +60,7 @@ def quantize_pallas(x: jax.Array, bits: int = 8, block: int = BLOCK,
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
 def dequantize_pallas(q: jax.Array, scale: jax.Array, block: int = BLOCK,
                       out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """Invert :func:`quantize_pallas` (per-tile scales broadcast back)."""
     n, d = q.shape
     grid = (n // block, d // block)
     return pl.pallas_call(

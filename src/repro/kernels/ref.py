@@ -28,6 +28,7 @@ def quantize_ref(x: jax.Array, bits: int, block: int = 256
 
 def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 256,
                    dtype=jnp.float32) -> jax.Array:
+    """Oracle inverse of :func:`quantize_ref`."""
     n, d = q.shape
     qt = q.reshape(n // block, block, d // block, block).transpose(0, 2, 1, 3)
     x = qt.astype(jnp.float32) * scale[:, :, None, None]
@@ -39,6 +40,7 @@ def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 256,
 # ----------------------------------------------------------------------
 def rf_predict_ref(feat: jax.Array, thr: jax.Array, leaf: jax.Array,
                    X: jax.Array, depth: int) -> jax.Array:
+    """Oracle forest inference (matches rf_predict_pallas)."""
     from repro.core.predictor import forest_predict_jnp
     return forest_predict_jnp(feat, thr, leaf, X, depth)
 

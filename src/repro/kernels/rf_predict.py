@@ -11,6 +11,12 @@ idiomatic TPU formulation for small tables:
 
 Grid: one cell per sample block; the whole forest (feat/thr/leaf) is
 resident in VMEM per cell (e.g. 100 trees x depth 8 ~= 0.4 MB).
+
+Backend selection: ``interpret=None`` (the default) resolves per
+backend — compiled Pallas on TPU, interpret mode elsewhere (CPU/GPU
+containers run the same kernel body for correctness). Pass an explicit
+bool to force either path; `repro.kernels.ops` additionally honors the
+``REPRO_PALLAS_INTERPRET`` environment variable.
 """
 from __future__ import annotations
 
@@ -23,6 +29,13 @@ from jax.experimental import pallas as pl
 SAMPLE_BLOCK = 128
 
 
+def default_interpret() -> bool:
+    """Backend-aware interpret default: compiled on TPU, interpret
+    everywhere else (the kernel targets the TPU lowering; interpret
+    executes the same body where no TPU is present)."""
+    return jax.default_backend() != "tpu"
+
+
 def _rf_kernel(feat_ref, thr_ref, leaf_ref, x_ref, out_ref, *, depth: int,
                n_trees: int):
     X = x_ref[...].astype(jnp.float32)            # [BS, F]
@@ -31,6 +44,7 @@ def _rf_kernel(feat_ref, thr_ref, leaf_ref, x_ref, out_ref, *, depth: int,
     NL = leaf_ref.shape[1]                         # 2^depth
 
     def tree_body(t, acc):
+        """Descend all samples through tree `t`; add its leaf values."""
         feat_t = feat_ref[t, :]                    # [NN] int32
         thr_t = thr_ref[t, :]                      # [NN] f32
         leaf_t = leaf_ref[t, :]                    # [NL] f32
@@ -59,8 +73,15 @@ def _rf_kernel(feat_ref, thr_ref, leaf_ref, x_ref, out_ref, *, depth: int,
                    static_argnames=("depth", "block", "interpret"))
 def rf_predict_pallas(feat: jax.Array, thr: jax.Array, leaf: jax.Array,
                       X: jax.Array, depth: int, block: int = SAMPLE_BLOCK,
-                      interpret: bool = True) -> jax.Array:
-    """feat/thr [T, 2^d-1], leaf [T, 2^d], X [n, F] -> [n] predictions."""
+                      interpret: bool = None) -> jax.Array:
+    """feat/thr [T, 2^d-1], leaf [T, 2^d], X [n, F] -> [n] predictions.
+
+    ``interpret=None`` resolves via :func:`default_interpret` (compiled
+    on TPU, interpret elsewhere); it is a static argument, so each
+    resolved value compiles once.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     n, F = X.shape
     T = feat.shape[0]
     pad = (-n) % block

@@ -8,8 +8,9 @@ same-seed replays. See DESIGN.md ("The scenario engine").
 """
 from repro.scenarios.engine import (ScenarioEngine, ScenarioSpec,
                                     run_scenario)
-from repro.scenarios.events import (CrossTraffic, DiurnalCycle, LinkDegrade,
-                                    LinkRestore, ProviderShift, Rescale,
+from repro.scenarios.events import (CrossTraffic, DiurnalCycle, JobArrive,
+                                    JobDepart, LinkDegrade, LinkRestore,
+                                    PriorityShift, ProviderShift, Rescale,
                                     SkewRamp, Straggler, at, flap)
 from repro.scenarios.library import SCENARIOS, get_scenario, scenario_names
 from repro.scenarios.trace import (ScenarioResult, ScenarioTrace, StepTrace,
@@ -21,4 +22,5 @@ __all__ = [
     "SCENARIOS", "get_scenario", "scenario_names",
     "at", "flap", "LinkDegrade", "LinkRestore", "CrossTraffic",
     "DiurnalCycle", "Rescale", "ProviderShift", "SkewRamp", "Straggler",
+    "JobArrive", "JobDepart", "PriorityShift",
 ]

@@ -86,10 +86,13 @@ class ScenarioEngine:
     # Helpers the events call back into
     # ------------------------------------------------------------------
     def link(self, pair: Sequence[str]) -> Tuple[int, int]:
+        """Resolve a (region, region) pair to simulator indices."""
         a, b = pair
         return self.sim.regions.index(a), self.sim.regions.index(b)
 
     def start_skew_ramp(self, weights: Sequence[float], over: int) -> None:
+        """Begin ramping the skew weights to `weights` over `over`
+        steps (SkewRamp event target)."""
         # refit any previous skew to the new vector's length (neutral
         # weight for pods it did not cover) so ramps compose with
         # rescales of either direction
@@ -147,6 +150,7 @@ class ScenarioEngine:
                 self._skew_ramp = None
 
     def run(self) -> ScenarioResult:
+        """Drive the timeline to completion and return the trace."""
         ctl, sim = self.controller, self.sim
         trace = ScenarioTrace(self.spec.name, self.seed)
         seen_records = len(ctl.record)

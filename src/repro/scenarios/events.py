@@ -22,6 +22,24 @@ synthetic workload when its step comes up:
   * :class:`Straggler` — multiply the synthetic step time for a window
     of steps (a slow host, not a slow network).
 
+Fleet timelines (repro.fleet.scenario.FleetEngine) add cross-job
+events:
+
+  * :class:`JobArrive` / :class:`JobDepart` — a workload joins or
+    leaves the shared WAN; the fleet re-arbitrates every survivor's
+    budget/capacity envelope.
+  * :class:`PriorityShift` — a job's fair-share weight changes (an SLO
+    promotion, a batch job yielding to serving traffic).
+
+The fleet events target the fleet engine only (they call
+``eng.add_job`` / ``eng.remove_job`` / ``eng.set_priority``). Of the
+events above, only the WAN-state ones (`LinkDegrade` / `LinkRestore`
+with ``notify=False``, `CrossTraffic`, `DiurnalCycle`) work on both
+engines; the workload events (`Rescale`, `SkewRamp`, `Straggler`,
+`ProviderShift`, and ``notify=True``) drive the single-job engine's
+synthetic workload/controller and are REJECTED by fleet timeline
+validation (`repro.fleet.scenario.FLEET_EVENTS`).
+
 Events name links by region pair; the engine resolves indices. All
 events are frozen dataclasses so timelines are hashable and their
 ``describe()`` strings are stable across runs (part of the trace).
@@ -29,25 +47,32 @@ events are frozen dataclasses so timelines are hashable and their
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Any, List, Tuple
 
 __all__ = ["at", "flap", "Timed", "Event", "LinkDegrade", "LinkRestore",
            "CrossTraffic", "DiurnalCycle", "Rescale", "ProviderShift",
-           "SkewRamp", "Straggler"]
+           "SkewRamp", "Straggler", "JobArrive", "JobDepart",
+           "PriorityShift"]
 
 
 @dataclass(frozen=True)
 class Event:
+    """Base event: `apply(engine)` mutates sim/controller/engine."""
+
     def apply(self, eng) -> None:               # pragma: no cover - abstract
+        """Execute the event against the engine."""
         raise NotImplementedError
 
     def describe(self) -> str:
+        """Stable one-line form (part of the trace bytes)."""
         args = ", ".join(f"{k}={v}" for k, v in vars(self).items())
         return f"{type(self).__name__}({args})"
 
 
 @dataclass(frozen=True)
 class Timed:
+    """An event pinned to a timeline step (build with :func:`at`)."""
+
     step: int
     event: Event
 
@@ -68,6 +93,7 @@ class LinkDegrade(Event):
     notify: bool = False          # visible maintenance vs silent congestion
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         i, j = eng.link(self.pair)
         eng.sim.set_link_factor(i, j, self.factor)
         if self.notify:
@@ -76,10 +102,13 @@ class LinkDegrade(Event):
 
 @dataclass(frozen=True)
 class LinkRestore(Event):
+    """Restore a degraded link to nominal."""
+
     pair: Tuple[str, str]
     notify: bool = False
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         i, j = eng.link(self.pair)
         eng.sim.set_link_factor(i, j, 1.0)
         if self.notify:
@@ -100,6 +129,7 @@ class CrossTraffic(Event):
     conns: float
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         i, j = eng.link(self.pair)
         eng.sim.set_background(i, j, self.conns)
         eng.sim.set_background(j, i, self.conns)
@@ -116,6 +146,7 @@ class DiurnalCycle(Event):
     period: int
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         eng.diurnal = (self.amplitude, self.period, eng.step)
 
 
@@ -125,6 +156,7 @@ class Rescale(Event):
     n_pods: int
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         eng.controller.rescale(
             self.n_pods, skew_w=eng.skew_for_pods(self.n_pods))
 
@@ -136,6 +168,7 @@ class ProviderShift(Event):
     factors: Tuple[float, ...]
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         eng.sim.set_provider_factor(list(self.factors))
         eng.controller.topology_changed()
 
@@ -148,7 +181,43 @@ class SkewRamp(Event):
     over: int
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         eng.start_skew_ramp(self.weights, self.over)
+
+
+# ----------------------------------------------------------------------
+# Fleet events (repro.fleet.scenario.FleetEngine timelines)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class JobArrive(Event):
+    """A new job joins the fleet (`job` is a repro.fleet JobSpec; typed
+    loosely here to keep the DSL import-free of the fleet package)."""
+    job: Any
+
+    def apply(self, eng) -> None:
+        """Execute against the engine."""
+        eng.add_job(self.job)
+
+
+@dataclass(frozen=True)
+class JobDepart(Event):
+    """A job leaves; its flows are withdrawn and survivors re-share."""
+    name: str
+
+    def apply(self, eng) -> None:
+        """Execute against the engine."""
+        eng.remove_job(self.name)
+
+
+@dataclass(frozen=True)
+class PriorityShift(Event):
+    """A job's fair-share weight changes at runtime."""
+    name: str
+    priority: float
+
+    def apply(self, eng) -> None:
+        """Execute against the engine."""
+        eng.set_priority(self.name, self.priority)
 
 
 @dataclass(frozen=True)
@@ -159,5 +228,6 @@ class Straggler(Event):
     duration: int = 1
 
     def apply(self, eng) -> None:
+        """Execute against the engine."""
         eng.straggler_mult = self.slowdown
         eng.straggler_until = eng.step + self.duration

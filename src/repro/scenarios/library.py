@@ -153,6 +153,7 @@ SCENARIOS: Dict[str, Callable[[], ScenarioSpec]] = {
 
 
 def get_scenario(name: str) -> ScenarioSpec:
+    """Fresh spec by name (KeyError lists the known names)."""
     if name not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"have {sorted(SCENARIOS)}")
@@ -160,4 +161,5 @@ def get_scenario(name: str) -> ScenarioSpec:
 
 
 def scenario_names() -> List[str]:
+    """All named scenarios, library order."""
     return list(SCENARIOS)

@@ -46,6 +46,8 @@ class StepTrace:
 
 @dataclass
 class ScenarioTrace:
+    """The whole run; `to_json()` is the byte-comparable replay form."""
+
     scenario: str
     seed: int
     steps: List[StepTrace] = field(default_factory=list)
@@ -60,22 +62,28 @@ class ScenarioTrace:
 
     # ---- convenience views ------------------------------------------
     def replan_steps(self, reason: str | None = None) -> List[int]:
+        """Steps that replanned (optionally only for one reason)."""
         return [s.step for s in self.steps for r in s.replans
                 if reason is None or r["reason"] == reason]
 
     def replan_reasons(self) -> List[str]:
+        """Every replan reason, in trace order."""
         return [r["reason"] for s in self.steps for r in s.replans]
 
     def signatures(self) -> List[str]:
+        """The in-force plan signature hash per step."""
         return [s.plan_sig for s in self.steps]
 
 
 @dataclass
 class ScenarioResult:
+    """A completed run plus summary helpers."""
+
     trace: ScenarioTrace
     payload_mb: float                # per-step ring payload
 
     def summary(self) -> Dict[str, Any]:
+        """Roll the trace up into the benchmark-row dict."""
         steps = self.trace.steps
         reasons: Dict[str, int] = {}
         for r in self.trace.replan_reasons():

@@ -27,6 +27,8 @@ from repro.models.layers import ShardCtx
 
 @dataclass
 class Request:
+    """One generation request (prompt in, generated ids out)."""
+
     rid: int
     prompt: np.ndarray                  # [S_prompt] int32
     max_new: int = 16
@@ -36,6 +38,8 @@ class Request:
 
 @dataclass
 class ServeConfig:
+    """Engine shape: slot count, max sequence, tensor-parallel width."""
+
     batch: int = 8
     s_max: int = 256
     tp: int = 1
@@ -72,6 +76,7 @@ class Engine:
 
     @plan.setter
     def plan(self, value: Optional[WanPlan]) -> None:
+        """Pin a static plan (overrides the live controller)."""
         self._static_plan = value
 
     # ------------------------------------------------------------------
@@ -96,6 +101,7 @@ class Engine:
 
     def prefill(self, batch_tokens: np.ndarray,
                 extras: Optional[Dict] = None) -> np.ndarray:
+        """Run prefill over a token batch; returns next-token argmax."""
         batch = {"tokens": jnp.asarray(batch_tokens)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
@@ -104,6 +110,7 @@ class Engine:
         return np.asarray(jnp.argmax(logits, axis=-1))
 
     def decode(self, tokens: np.ndarray) -> np.ndarray:
+        """Advance every live slot one step; returns next-token argmax."""
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens[:, None]),
             jnp.int32(self.pos))
@@ -153,6 +160,7 @@ def kv_migrate(cache: Any, plan: WanPlan, src_pod: int, *,
     rank = jax.lax.axis_index(axis)
 
     def leaf(x):
+        """Migrate one cache leaf through the offset phases."""
         out = x
         for ph in sched:
             o, chunks, bits = ph["offset"], ph["chunks"], ph["bits"]

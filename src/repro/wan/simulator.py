@@ -32,11 +32,21 @@ degradation), `modulation` (global diurnal multiplier),
 `background_conns` (cross-traffic that contends in the water-filling
 but is never credited to the workload), and `set_provider_factor`
 (provider migration, §3.3.3).
+
+Multi-tenant sharing (repro.fleet): `set_tenant_conns` registers a
+named tenant's connection matrix. Registered tenants CONTEND like
+cross-traffic but, unlike `background_conns`, their share is CREDITED:
+`waterfill(c, tenant=...)` excludes the caller's own registration (so
+its in-flight matrix is not double-counted) while every other tenant's
+flows fight it out in the same fill, and `waterfill_tenants` solves
+ONE fill for the whole fleet and credits each tenant rate x own-conns.
+Flows on the same pair share the pair's per-connection rate, so the
+aggregate fill is exact, not an approximation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -45,6 +55,8 @@ from repro.wan import topology as topo
 
 @dataclass
 class WanSimulator:
+    """The shared WAN ground truth (see module docstring)."""
+
     regions: List[str] = field(default_factory=lambda: list(topo.DEFAULT_8DC))
     # sustained WAN egress/ingress cap of a t2.medium-class worker;
     # calibrated so all-pairs contention reproduces Table 1 (18 pairs with
@@ -66,6 +78,9 @@ class WanSimulator:
     # cross-traffic [N,N] connection counts: contend in waterfill, never
     # credited to the workload's achieved BW (scenario engine knob)
     background_conns: Optional[np.ndarray] = None
+    # named tenants' [N,N] connection matrices: contend like cross-
+    # traffic but their share IS credited (fleet arbitration)
+    tenant_conns: Dict[str, np.ndarray] = field(default_factory=dict)
 
     def __post_init__(self):
         self.N = len(self.regions)
@@ -108,6 +123,23 @@ class WanSimulator:
             self.background_conns = np.zeros((self.N, self.N))
         self.background_conns[i, j] = float(conns)
 
+    def set_tenant_conns(self, tenant: str, conns: np.ndarray) -> None:
+        """Register tenant's [N,N] connection matrix (fleet workloads).
+
+        Registered flows contend in every fill; pass ``tenant=`` to
+        :meth:`waterfill` / the measure_* modes so the caller's own
+        registration is excluded instead of double-counted.
+        """
+        c = np.asarray(conns, np.float64).copy()
+        if c.shape != (self.N, self.N):
+            raise ValueError(f"tenant conns must be [{self.N},{self.N}]")
+        np.fill_diagonal(c, 0.0)
+        self.tenant_conns[tenant] = np.maximum(c, 0.0)
+
+    def clear_tenant(self, tenant: str) -> None:
+        """Drop a tenant's registered flows (job departure)."""
+        self.tenant_conns.pop(tenant, None)
+
     # ------------------------------------------------------------------
     def advance(self, steps: int = 1) -> None:
         """Advance the fluctuation process (call once per epoch/minute)."""
@@ -147,25 +179,86 @@ class WanSimulator:
         np.fill_diagonal(w, 0.0)
         return w
 
-    def waterfill(self, conns: np.ndarray,
-                  active: Optional[np.ndarray] = None,
-                  cap: Optional[np.ndarray] = None) -> np.ndarray:
-        """conns: [N,N] parallel connections per pair (0 or diag = idle).
-        RTT-biased weighted progressive filling. `cap` is an optional
-        per-pair BW ceiling — WANify's TC throttling of BW-rich links
-        (Section 3.2.2). Returns achieved BW per pair [N,N] in Mbps."""
-        N = self.N
-        single = self.link_bw_now()
-        egress, ingress = self._caps()
-        c = np.asarray(conns, np.float64).copy()
-        np.fill_diagonal(c, 0.0)
-        if active is not None:
-            c = c * active
-        own = c.copy()                             # the workload's flows
+    def _contending_conns(self, own: np.ndarray,
+                          tenant: Optional[str] = None) -> np.ndarray:
+        """Aggregate flow count per pair: the caller's own flows plus
+        uncredited cross-traffic plus every OTHER registered tenant
+        (the caller's registration, named by `tenant`, is excluded so a
+        tenant measuring at its in-force matrix is not double-counted).
+        """
+        c = own.copy()
         if self.background_conns is not None:
             bg = np.asarray(self.background_conns, np.float64).copy()
             np.fill_diagonal(bg, 0.0)
             c = c + np.maximum(bg, 0.0)            # cross-traffic contends
+        for name, tc in self.tenant_conns.items():
+            if name != tenant:
+                c = c + tc                         # rival tenants contend
+        return c
+
+    def waterfill(self, conns: np.ndarray,
+                  active: Optional[np.ndarray] = None,
+                  cap: Optional[np.ndarray] = None,
+                  tenant: Optional[str] = None) -> np.ndarray:
+        """Achieved BW per pair [N,N] in Mbps for one workload.
+
+        conns: [N,N] parallel connections per pair (0 or diag = idle).
+        RTT-biased weighted progressive filling. `cap` is an optional
+        per-pair BW ceiling — WANify's TC throttling of BW-rich links
+        (Section 3.2.2). `tenant` names the caller so its own
+        registered flows (see :meth:`set_tenant_conns`) are excluded
+        from the contention aggregate.
+        """
+        own = np.asarray(conns, np.float64).copy()
+        np.fill_diagonal(own, 0.0)
+        if active is not None:
+            own = own * active
+        c = self._contending_conns(own, tenant)
+        rate = self._fill_rates(c, cap)
+        bw = rate * own              # uncredited traffic earns nothing
+        np.fill_diagonal(bw, topo.INTRA_DC_BW)
+        return bw
+
+    def waterfill_tenants(self, conns_by_tenant: Dict[str, np.ndarray],
+                          cap: Optional[np.ndarray] = None
+                          ) -> Dict[str, np.ndarray]:
+        """ONE fill for a whole fleet: all tenants' flows (plus any
+        uncredited background) contend together, and each tenant is
+        credited its per-connection rate x its own connection count.
+        Exact because flows on the same pair share the pair's rate —
+        and a single solve instead of one per job is what keeps the
+        fleet tick sublinear in job count.
+        """
+        stack = {}
+        for name, conns in conns_by_tenant.items():
+            c = np.asarray(conns, np.float64).copy()
+            np.fill_diagonal(c, 0.0)
+            stack[name] = np.maximum(c, 0.0)
+        total = np.zeros((self.N, self.N))
+        for c in stack.values():
+            total += c
+        total = self._contending_conns(total, tenant=None)
+        # registered tenants already appear in `stack`; exclude their
+        # registration from the aggregate to avoid double-counting
+        for name, tc in self.tenant_conns.items():
+            if name in stack:
+                total -= tc
+        rate = self._fill_rates(total, cap)
+        out = {}
+        for name, c in stack.items():
+            bw = rate * c
+            np.fill_diagonal(bw, topo.INTRA_DC_BW)
+            out[name] = bw
+        return out
+
+    def _fill_rates(self, c: np.ndarray,
+                    cap: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-connection rate [N,N] for an aggregate flow matrix `c`
+        (diagonal ignored; every flow on a pair gets the same rate).
+        """
+        N = self.N
+        single = self.link_bw_now()
+        egress, ingress = self._caps()
         w = self.rtt_weight()                      # per-connection weight
         cw = c * w                                 # aggregate pair weight
         per_conn_cap = single                      # one stream's ceiling
@@ -210,9 +303,7 @@ class WanSimulator:
             if not hit.any() and inc == 0.0:
                 break
             frozen |= hit
-        bw = rate * own              # cross-traffic BW is never credited
-        np.fill_diagonal(bw, topo.INTRA_DC_BW)
-        return bw
+        return rate
 
     # ------------------------------------------------------------------
     # Measurement modes
@@ -232,11 +323,12 @@ class WanSimulator:
 
     def measure_simultaneous(self, conns: Optional[np.ndarray] = None,
                              noise: float = 0.0,
-                             cap: Optional[np.ndarray] = None) -> np.ndarray:
+                             cap: Optional[np.ndarray] = None,
+                             tenant: Optional[str] = None) -> np.ndarray:
         """All pairs at once (runtime / static-simultaneous)."""
         N = self.N
         c = np.ones((N, N)) if conns is None else np.asarray(conns, float)
-        bw = self.waterfill(c, cap=cap)
+        bw = self.waterfill(c, cap=cap, tenant=tenant)
         if noise > 0:
             off = ~np.eye(N, dtype=bool)
             eps = self.rng_obs.normal(0, noise, (N, N))
@@ -247,24 +339,28 @@ class WanSimulator:
         return bw
 
     def measure_runtime(self, conns: Optional[np.ndarray] = None,
-                        cap: Optional[np.ndarray] = None) -> np.ndarray:
+                        cap: Optional[np.ndarray] = None,
+                        tenant: Optional[str] = None) -> np.ndarray:
         """Stable >=20 s all-pairs measurement (small residual noise)."""
         return self.measure_simultaneous(conns, noise=self.runtime_sigma,
-                                         cap=cap)
+                                         cap=cap, tenant=tenant)
 
-    def measure_snapshot(self, conns: Optional[np.ndarray] = None) -> np.ndarray:
+    def measure_snapshot(self, conns: Optional[np.ndarray] = None,
+                         tenant: Optional[str] = None) -> np.ndarray:
         """Cheap 1-second sample: same ground truth, more noise."""
-        return self.measure_simultaneous(conns, noise=self.snapshot_sigma)
+        return self.measure_simultaneous(conns, noise=self.snapshot_sigma,
+                                         tenant=tenant)
 
     # ------------------------------------------------------------------
-    def host_metrics(self, conns: np.ndarray, bw: Optional[np.ndarray] = None):
+    def host_metrics(self, conns: np.ndarray, bw: Optional[np.ndarray] = None,
+                     tenant: Optional[str] = None):
         """Simulated node metrics for Table-3 features:
         mem_util[j] (receiver buffers scale with incoming connections),
         cpu_load[i] (sender), retrans[i,j] (congestion proxy)."""
         c = np.asarray(conns, float).copy()
         np.fill_diagonal(c, 0)
         if bw is None:
-            bw = self.waterfill(c)
+            bw = self.waterfill(c, tenant=tenant)
         total_in = c.sum(axis=0)
         total_out = c.sum(axis=1)
         mem_util = np.clip(0.15 + 0.02 * total_in +

@@ -30,6 +30,7 @@ DEFAULT_8DC: List[str] = list(AWS_REGIONS)
 
 
 def haversine_miles(a: Tuple[float, float], b: Tuple[float, float]) -> float:
+    """Great-circle distance in miles between two (lat, lon) points."""
     R = 3958.8
     la1, lo1, la2, lo2 = map(math.radians, (a[0], a[1], b[0], b[1]))
     h = math.sin((la2 - la1) / 2) ** 2 + \
@@ -38,6 +39,7 @@ def haversine_miles(a: Tuple[float, float], b: Tuple[float, float]) -> float:
 
 
 def distance_matrix(regions: List[str]) -> np.ndarray:
+    """Pairwise great-circle distances [N,N] for named regions."""
     N = len(regions)
     d = np.zeros((N, N))
     for i in range(N):
@@ -66,6 +68,8 @@ INTRA_DC_BW = 10000.0
 
 
 def bw_single(dist_miles: float) -> float:
+    """Distance-calibrated single-connection BW (Mbps); see module
+    docstring for the calibration anchors."""
     if dist_miles <= 0:
         return INTRA_DC_BW
     return float(np.clip(_A / dist_miles ** _ALPHA,
@@ -73,6 +77,7 @@ def bw_single(dist_miles: float) -> float:
 
 
 def bw_single_matrix(regions: List[str]) -> np.ndarray:
+    """Single-connection BW [N,N] (INTRA_DC_BW on the diagonal)."""
     d = distance_matrix(regions)
     N = len(regions)
     out = np.full((N, N), INTRA_DC_BW)

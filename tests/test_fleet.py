@@ -1,0 +1,290 @@
+"""Fleet integration tier: N concurrent jobs arbitrated over one WAN.
+
+Covers the acceptance criteria of the fleet subsystem: byte-identical
+replay of a >=3-job scenario, per-job min-link BW inside the priority-
+weighted fair-share envelope, exactly one batched RF kernel launch per
+fleet tick (counted at both the predictor and the kernel wrapper), and
+the arbitration invariants (per-host budget never oversubscribed,
+caps proportional to priority on fully shared links).
+"""
+import numpy as np
+import pytest
+
+from repro.core.global_opt import split_budget
+from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
+                         TenantView, default_fleet_forest,
+                         get_fleet_scenario, run_fleet_scenario)
+from repro.wan.simulator import WanSimulator
+
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
+
+
+@pytest.fixture(scope="module")
+def forest():
+    """One small deterministic forest shared by every fleet test."""
+    return default_fleet_forest(n_samples=40, n_trees=6, depth=4, seed=7)
+
+
+@pytest.fixture(scope="module")
+def steady(forest):
+    """One deterministic run of the 3-job steady scenario."""
+    return run_fleet_scenario(get_fleet_scenario("fleet_steady"),
+                              seed=0, forest=forest)
+
+
+# ----------------------------------------------------------------------
+# Acceptance: determinism, fairness envelope, one kernel launch per tick
+# ----------------------------------------------------------------------
+def test_fleet_replay_byte_identical(forest):
+    """>=3 concurrent jobs replay to byte-identical canonical JSON."""
+    spec = get_fleet_scenario("fleet_steady")
+    assert len(spec.jobs) >= 3
+    a = run_fleet_scenario(spec, seed=3, forest=forest).trace.to_json()
+    b = run_fleet_scenario(get_fleet_scenario("fleet_steady"),
+                           seed=3, forest=forest).trace.to_json()
+    assert a.encode() == b.encode()
+
+
+def test_fleet_seeds_diverge(forest):
+    a = run_fleet_scenario(get_fleet_scenario("fleet_steady"),
+                           seed=0, forest=forest).trace.to_json()
+    b = run_fleet_scenario(get_fleet_scenario("fleet_steady"),
+                           seed=1, forest=forest).trace.to_json()
+    assert a != b
+
+
+def test_one_rf_kernel_launch_per_tick(forest, monkeypatch):
+    """The whole fleet's inference is ONE kernel launch per tick,
+    counted both at the batched predictor and at the kernel wrapper
+    actually launching Pallas."""
+    from repro.kernels import ops
+    launches = {"n": 0}
+    real = ops.rf_predict
+
+    def counting(*args, **kw):
+        launches["n"] += 1
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops, "rf_predict", counting)
+    res = run_fleet_scenario(get_fleet_scenario("fleet_steady"),
+                             seed=0, forest=forest)
+    ticks = len(res.trace.steps)
+    assert res.trace.steps[-1].kernel_calls == ticks
+    assert launches["n"] == ticks
+    # the per-tick counter in the trace is cumulative and monotone
+    assert [s.kernel_calls for s in res.trace.steps] == \
+        list(range(1, ticks + 1))
+
+
+def test_one_launch_per_tick_through_churn(forest):
+    """Arrivals bootstrap from the snapshot ablation (no RF launch), so
+    churn never breaks the one-launch-per-tick invariant."""
+    res = run_fleet_scenario(get_fleet_scenario("fleet_churn"),
+                             seed=0, forest=forest)
+    ticks = len(res.trace.steps)
+    assert res.trace.steps[-1].kernel_calls == ticks
+    assert [s.n_jobs for s in res.trace.steps] == \
+        [2, 2, 2, 2, 3, 3, 3, 3, 3, 2, 2, 2, 2, 2]
+
+
+def test_min_bw_within_fair_share_envelope(steady):
+    """Each job's credited min-link BW stays within its arbitrated
+    envelope (TC shaping: achieved <= cap on every contended link)."""
+    for s in steady.trace.steps:
+        for row in s.jobs:
+            assert row["achieved_min"] <= row["cap_min"] + 1e-9
+
+
+def test_priority_orders_budget_cap_and_bw(forest):
+    """On a fully shared slice, the higher-priority job gets the larger
+    connection budget, the larger capacity share (proportional to its
+    weight), and at least the lower-priority job's min-link BW."""
+    res = run_fleet_scenario(get_fleet_scenario("fleet_priority_shift"),
+                             seed=0, forest=forest)
+    pre = res.trace.steps[4]          # before the shift: serving 4, batch 1
+    rows = {r["name"]: r for r in pre.jobs}
+    assert rows["serving"]["budget"] > rows["batch"]["budget"]
+    assert rows["serving"]["cap_min"] == pytest.approx(
+        4.0 * rows["batch"]["cap_min"], rel=1e-6)
+    assert rows["serving"]["achieved_min"] >= rows["batch"]["achieved_min"]
+    post = res.trace.steps[-1]        # after: batch 6, serving 4
+    rows = {r["name"]: r for r in post.jobs}
+    assert rows["batch"]["budget"] > rows["serving"]["budget"]
+    assert rows["batch"]["cap_min"] > rows["serving"]["cap_min"]
+
+
+def test_per_host_budget_never_oversubscribed(forest):
+    """Arbitration invariant: at every DC, the admitted jobs' budgets
+    sum to at most the fleet-wide per-host M."""
+    sim = WanSimulator(seed=0, **QUIET)
+    fleet = FleetController(
+        sim, BatchedRfPredictor(forest), m_total=8,
+        jobs=(JobSpec("a", (0, 1, 2, 3), priority=5.0),
+              JobSpec("b", (0, 1, 4, 5), priority=2.0),
+              JobSpec("c", (0, 2, 4, 6), priority=1.0)))
+    fleet.tick()
+    per_dc = np.zeros(sim.N)
+    for job in fleet.jobs.values():
+        m = job.controller.envelope.max_conns
+        for d in job.spec.dcs:
+            per_dc[d] += m
+    assert (per_dc <= 8).all()
+    # and every job keeps at least one connection of budget
+    assert all(j.controller.envelope.max_conns >= 1
+               for j in fleet.jobs.values())
+
+
+def test_depart_frees_share_for_survivors(forest):
+    """After the low-priority job departs, the survivor's envelope
+    grows back toward the full per-host budget."""
+    res = run_fleet_scenario(get_fleet_scenario("fleet_churn"),
+                             seed=0, forest=forest)
+    t = res.trace
+    before = {r["name"]: r for r in t.steps[8].jobs}   # 3 jobs
+    after = {r["name"]: r for r in t.steps[9].jobs}    # batch departed
+    assert after["serving"]["budget"] >= before["serving"]["budget"]
+    assert "batch" not in after
+
+
+# ----------------------------------------------------------------------
+# Tenant crediting + the sliced view
+# ----------------------------------------------------------------------
+def test_tenant_crediting_sums_to_aggregate_fill():
+    """Per-tenant credited BW from one fleet-wide fill equals the
+    aggregate fill split by connection count (flows on a pair share
+    the pair's per-connection rate)."""
+    sim = WanSimulator(seed=0, **QUIET)
+    c1 = np.zeros((8, 8))
+    c1[0, 1] = 6
+    c2 = np.zeros((8, 8))
+    c2[0, 1] = 2
+    per = sim.waterfill_tenants({"a": c1, "b": c2})
+    agg = sim.waterfill(c1 + c2)
+    assert per["a"][0, 1] + per["b"][0, 1] == pytest.approx(agg[0, 1])
+    assert per["a"][0, 1] == pytest.approx(3.0 * per["b"][0, 1])
+
+
+def test_registered_rival_contends_in_measurement():
+    """A tenant measuring its own flows sees rival tenants as real
+    contention — but never its own registration twice."""
+    sim = WanSimulator(seed=0, **QUIET)
+    c = np.zeros((8, 8))
+    c[0, 1] = 4
+    solo = sim.waterfill(c, tenant="a")
+    sim.set_tenant_conns("a", c)
+    again = sim.waterfill(c, tenant="a")
+    np.testing.assert_allclose(again, solo)        # no double-count
+    rival = np.zeros((8, 8))
+    rival[0, 1] = 4
+    sim.set_tenant_conns("b", rival)
+    contended = sim.waterfill(c, tenant="a")
+    assert contended[0, 1] < solo[0, 1]
+    sim.clear_tenant("b")
+    np.testing.assert_allclose(sim.waterfill(c, tenant="a"), solo)
+
+
+def test_tenant_view_slices_the_shared_mesh():
+    """TenantView embeds slice conns into the mesh, measures tenant-
+    aware, and slices back; with no rivals it matches the plain fill."""
+    sim = WanSimulator(seed=0, **QUIET)
+    view = TenantView(sim, "job", dcs=(2, 5, 6, 7))
+    assert view.N == 4
+    assert view.regions == [sim.regions[i] for i in (2, 5, 6, 7)]
+    c = np.ones((4, 4)) * 3
+    got = view.waterfill(c)
+    full = np.zeros((8, 8))
+    full[np.ix_([2, 5, 6, 7], [2, 5, 6, 7])] = c
+    want = sim.waterfill(full)[np.ix_([2, 5, 6, 7], [2, 5, 6, 7])]
+    np.testing.assert_allclose(got, want)
+
+
+def test_tenant_view_rejects_bad_slices():
+    sim = WanSimulator(seed=0)
+    with pytest.raises(ValueError):
+        TenantView(sim, "x", dcs=(0, 0, 1))
+    with pytest.raises(ValueError):
+        TenantView(sim, "x", dcs=(0, 99))
+
+
+def test_duplicate_job_name_rejected(forest):
+    sim = WanSimulator(seed=0, **QUIET)
+    fleet = FleetController(sim, BatchedRfPredictor(forest),
+                            jobs=(JobSpec("a", (0, 1)),))
+    with pytest.raises(ValueError):
+        fleet.add_job(JobSpec("a", (2, 3)))
+
+
+def test_single_dc_job_rejected_at_admission(forest):
+    """A one-DC job has no WAN pairs to plan; it must be rejected at
+    add_job instead of crashing the whole fleet's next tick."""
+    sim = WanSimulator(seed=0, **QUIET)
+    fleet = FleetController(sim, BatchedRfPredictor(forest),
+                            jobs=(JobSpec("a", (0, 1)),))
+    with pytest.raises(ValueError, match="WAN pairs"):
+        fleet.add_job(JobSpec("solo", (3,)))
+    fleet.tick()                                  # fleet still healthy
+    assert list(fleet.jobs) == ["a"]
+
+
+def test_fleet_timeline_rejects_single_job_events(forest):
+    """Workload events (Straggler, Rescale, ...) and notify=True would
+    silently no-op or crash mid-run on the fleet engine; the spec is
+    rejected up front instead."""
+    from repro.fleet import FleetEngine, FleetScenarioSpec
+    from repro.scenarios import LinkDegrade, Straggler, at
+    jobs = (JobSpec("a", (0, 1, 2)), JobSpec("b", (0, 1, 3)))
+    bad = FleetScenarioSpec(
+        name="bad", steps=4, jobs=jobs,
+        events=(at(1, Straggler(slowdown=4.0)),), sim_kwargs=dict(QUIET))
+    with pytest.raises(ValueError, match="single-job-engine"):
+        FleetEngine(bad, seed=0, forest=forest)
+    noisy = FleetScenarioSpec(
+        name="bad2", steps=4, jobs=jobs,
+        events=(at(1, LinkDegrade(("us-east", "us-west"), 0.1,
+                                  notify=True)),),
+        sim_kwargs=dict(QUIET))
+    with pytest.raises(ValueError, match="notify"):
+        FleetEngine(noisy, seed=0, forest=forest)
+
+
+def test_mesh_scale_envelope_rejected_by_controller():
+    """A mesh-scale link_cap handed straight to a controller planning a
+    non-prefix slice would cap the wrong links; the controller demands
+    pod-scale caps instead of silently prefix-slicing."""
+    from repro.control import BudgetEnvelope, WanifyController
+    from repro.core.predictor import SnapshotPredictor
+    sim = WanSimulator(seed=0, **QUIET)
+    ctl = WanifyController(sim=sim, predictor=SnapshotPredictor(),
+                           n_pods=4)
+    ctl.set_envelope(BudgetEnvelope(max_conns=4,
+                                    link_cap=np.full((8, 8), 500.0)))
+    with pytest.raises(ValueError, match="pod scale"):
+        ctl.replan()
+
+
+# ----------------------------------------------------------------------
+# Budget splitting (the arbiter's core primitive)
+# ----------------------------------------------------------------------
+def test_split_budget_invariants():
+    for M in (2, 3, 8, 16):
+        for w in ([1.0], [1, 1], [3, 1], [5, 2, 1], [1] * 6):
+            s = split_budget(M, np.asarray(w, float))
+            assert (s >= 1).all()
+            if M >= len(w):
+                assert s.sum() <= M
+            # monotone in weight (equal weights may differ by the
+            # 1-connection largest-remainder slack)
+            for i in range(len(w)):
+                for j in range(len(w)):
+                    if w[i] < w[j]:
+                        assert s[i] <= s[j]
+
+
+def test_split_budget_proportions():
+    np.testing.assert_array_equal(split_budget(8, np.array([3.0, 1.0])),
+                                  [6, 2])
+    np.testing.assert_array_equal(split_budget(8, np.array([1.0, 1.0])),
+                                  [4, 4])
+    # more tenants than budget: everyone keeps the floor of one
+    np.testing.assert_array_equal(split_budget(3, np.array([9., 1., 1., 1.])),
+                                  [1, 1, 1, 1])

@@ -71,3 +71,80 @@ def test_throttle_caps_rich_links():
         if finite.any():
             T = plan.max_bw[i][off[i]].mean()
             np.testing.assert_allclose(capped[finite], T)
+
+
+# ----------------------------------------------------------------------
+# §3.2.2 throttling, tested directly: which links get capped, at what
+# value, and how the cap propagates through the fill and the agents
+# ----------------------------------------------------------------------
+def test_throttle_rich_set_is_exactly_above_row_mean():
+    """Per row, the capped destinations are EXACTLY those whose
+    achievable max BW exceeds the row mean T; everything else
+    (including the diagonal) stays uncapped."""
+    plan = global_optimize(PAPER_BW, M=8, D=30)
+    off = ~np.eye(3, dtype=bool)
+    for i in range(3):
+        T = plan.max_bw[i][off[i]].mean()
+        for j in range(3):
+            if i == j:
+                assert np.isinf(plan.throttle[i, j])
+            elif plan.max_bw[i, j] > T:
+                assert plan.throttle[i, j] == T
+            else:
+                assert np.isinf(plan.throttle[i, j])
+
+
+def test_throttle_disabled_leaves_all_links_uncapped():
+    plan = global_optimize(PAPER_BW, M=8, D=30, throttle_enabled=False)
+    assert np.isinf(plan.throttle).all()
+
+
+def test_throttle_cap_enforced_by_waterfill():
+    """The simulator's `cap` argument is the TC analogue: achieved BW
+    on a throttled pair never exceeds the row-mean cap."""
+    from repro.wan.simulator import WanSimulator
+    sim = WanSimulator(seed=0, fluct_sigma=0.0, snapshot_sigma=0.0,
+                       runtime_sigma=0.0)
+    conns = np.ones((8, 8)) * 4
+    free = sim.waterfill(conns)
+    plan = global_optimize(free, M=8)
+    capped = sim.waterfill(conns, cap=plan.throttle)
+    off = ~np.eye(8, dtype=bool)
+    finite = np.isfinite(plan.throttle) & off
+    assert finite.any()
+    assert (capped[finite] <= plan.throttle[finite] + 1e-6).all()
+    # throttling a rich pair can only help the row's weakest pair
+    for i in range(8):
+        assert capped[i][off[i]].min() >= free[i][off[i]].min() - 1e-6
+
+
+def test_aimd_target_never_exceeds_throttle():
+    """The local agents' additive increase is clipped at the throttle:
+    even under perfectly-on-target monitoring the target BW of a
+    capped destination converges to the cap, not to max_bw."""
+    from repro.core.local_opt import AimdAgent
+    plan = global_optimize(PAPER_BW, M=8, D=30)
+    src = 0
+    ag = AimdAgent.from_plan(plan, src)
+    for _ in range(50):
+        ag.step(ag.target_bw.copy())      # monitored == target
+    for j in range(3):
+        if j != src and np.isfinite(plan.throttle[src, j]):
+            assert ag.target_bw[j] <= plan.throttle[src, j] + 1e-9
+
+
+def test_external_link_cap_joins_throttle_and_clamps_conns():
+    """A fleet-arbitrated link cap tightens the plan: the throttle is
+    min(row-mean cap, link cap) and max_cons never buys BW past the
+    cap (budget spent beyond ceil(cap/unit_bw) is wasted)."""
+    lc = np.full((3, 3), np.inf)
+    lc[0, 1] = 500.0                      # 400 Mbps/conn link capped
+    base = global_optimize(PAPER_BW, M=8, D=30)
+    plan = global_optimize(PAPER_BW, M=8, D=30, link_cap=lc)
+    assert plan.throttle[0, 1] == 500.0
+    assert plan.max_cons[0, 1] == 2       # ceil(500/400)
+    assert plan.max_cons[0, 1] < base.max_cons[0, 1]
+    # uncapped entries are untouched
+    assert plan.max_cons[0, 2] == base.max_cons[0, 2]
+    np.testing.assert_array_equal(plan.min_cons <= plan.max_cons,
+                                  np.ones((3, 3), bool))

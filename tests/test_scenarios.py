@@ -214,6 +214,36 @@ def test_event_dsl_construction():
         "Straggler(slowdown=4.0, duration=2)"
 
 
+def test_fleet_events_target_engine_surface():
+    """The fleet events (JobArrive/JobDepart/PriorityShift) drive the
+    engine's churn surface and keep stable describe() strings — the
+    real fleet engine is exercised in tests/test_fleet.py; here a stub
+    pins the DSL contract without importing the fleet package."""
+    from repro.scenarios import JobArrive, JobDepart, PriorityShift
+
+    class StubEngine:
+        calls = []
+
+        def add_job(self, spec):
+            self.calls.append(("add", spec))
+
+        def remove_job(self, name):
+            self.calls.append(("remove", name))
+
+        def set_priority(self, name, priority):
+            self.calls.append(("prio", name, priority))
+
+    eng = StubEngine()
+    JobArrive(job="spec-sentinel").apply(eng)
+    JobDepart(name="batch").apply(eng)
+    PriorityShift(name="serving", priority=6.0).apply(eng)
+    assert eng.calls == [("add", "spec-sentinel"), ("remove", "batch"),
+                         ("prio", "serving", 6.0)]
+    assert JobDepart(name="batch").describe() == "JobDepart(name=batch)"
+    assert PriorityShift("a", 2.0).describe() == \
+        "PriorityShift(name=a, priority=2.0)"
+
+
 def test_unknown_scenario_rejected():
     with pytest.raises(KeyError):
         get_scenario("no-such-scenario")

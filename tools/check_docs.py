@@ -1,0 +1,67 @@
+"""Docs reference checker (CI `docs` job).
+
+Every module path or dotted `repro.*` name mentioned in
+`docs/paper_map.md` and `DESIGN.md` must exist in the tree, and every
+`tests/...py::test_name` reference must name a real test function —
+documentation that points at renamed or deleted code fails the build.
+
+Run:  python tools/check_docs.py   (from the repo root; no deps)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["docs/paper_map.md", "DESIGN.md", "README.md"]
+
+# backtick-quoted references we verify:
+PATH_RE = re.compile(r"`((?:src|tests|benchmarks|examples|tools|docs)/"
+                     r"[\w/.-]+?\.(?:py|md))(?:::(\w+))?`")
+MODULE_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def module_exists(dotted: str) -> bool:
+    """True if `repro.a.b` resolves to src/repro/a/b.py or a package."""
+    rel = Path("src", *dotted.split("."))
+    return (ROOT / rel).with_suffix(".py").exists() or \
+        (ROOT / rel / "__init__.py").exists()
+
+
+def test_function_exists(path: Path, name: str) -> bool:
+    """True if `def <name>(` appears in the referenced test file."""
+    try:
+        text = path.read_text()
+    except OSError:
+        return False
+    return re.search(rf"^def {re.escape(name)}\(", text, re.M) is not None
+
+
+def check() -> int:
+    """Scan the doc set; returns the number of dangling references."""
+    bad = 0
+    for doc in DOCS:
+        text = (ROOT / doc).read_text()
+        for m in PATH_RE.finditer(text):
+            rel, func = m.group(1), m.group(2)
+            target = ROOT / rel
+            if not target.exists():
+                print(f"{doc}: missing file `{rel}`")
+                bad += 1
+            elif func and not test_function_exists(target, func):
+                print(f"{doc}: `{rel}` has no function `{func}`")
+                bad += 1
+        for m in MODULE_RE.finditer(text):
+            if not module_exists(m.group(1)):
+                print(f"{doc}: missing module `{m.group(1)}`")
+                bad += 1
+    if bad:
+        print(f"check_docs: {bad} dangling reference(s)")
+    else:
+        print("check_docs: all documentation references resolve")
+    return bad
+
+
+if __name__ == "__main__":
+    sys.exit(1 if check() else 0)
