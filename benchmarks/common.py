@@ -1,34 +1,92 @@
 """Shared benchmark machinery: the GDA query model used by every
-latency/cost table (Table 4, Fig. 5-10).
+latency/cost table (Table 4, Fig. 5-10), plus the machine-readable
+output writer every JSON benchmark shares.
 
 A query stage moves an intermediate-data volume matrix V[i,j] (Gb)
 between DCs; its network time is the paper's bottleneck formula
 max_ij V_ij / BW_ij (Fig. 2d). A WAN-aware placement (Tetrium/Kimchi
 stand-in) chooses per-DC task fractions from ESTIMATED BWs; latency is
 then evaluated under the TRUE runtime BW — inaccurate estimates yield
-sub-optimal placements exactly as in §2.2.
+sub-optimal placements exactly as in §2.2. (The richer stage-DAG
+placement layer lives in `repro.placement`; this module keeps the
+original single-vector model the paper-table benches consume.)
+
+Machine-readable output: every JSON bench builds its CLI with
+`bench_parser(name=...)` and finishes with `emit(name, rows, args)` —
+`--json [PATH]` writes `BENCH_<name>.json` ({"bench", "schema",
+"rows"}) next to the working directory so the perf trajectory is
+tracked across PRs instead of scraped from stdout; `--smoke` asks the
+bench for CI-sized inputs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.global_opt import GlobalPlan, global_optimize
+# single source of truth for the worker price and the Fig. 2d
+# bottleneck formula (the placement layer owns both)
+from repro.placement.cost import INSTANCE_USD_PER_HOUR, bottleneck_time_s
+from repro.wan.monitor import NET_COST_PER_GB as EGRESS_USD_PER_GB
 from repro.wan.simulator import WanSimulator
 
-INSTANCE_USD_PER_HOUR = 0.0464 + 2 * 0.05      # t2.medium + vCPU burst
-EGRESS_USD_PER_GB = 0.09
+BENCH_SCHEMA = 1
+
+
+def bench_parser(description: str, name: str,
+                 default_seed: int = 0) -> argparse.ArgumentParser:
+    """Shared CLI for the JSON benchmarks: `--seed`, `--out` (pretty
+    JSON to a file instead of stdout), `--json [PATH]` (machine-
+    readable `BENCH_<name>.json`), and `--smoke` (tiny CI sizes)."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--seed", type=int, default=default_seed)
+    ap.add_argument("--out", type=str, default=None,
+                    help="write pretty JSON here instead of stdout")
+    ap.add_argument("--json", nargs="?", const=f"BENCH_{name}.json",
+                    default=None, metavar="PATH",
+                    help=f"also write machine-readable "
+                         f"BENCH_{name}.json (or PATH)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes so CI can smoke-run the bench")
+    return ap
+
+
+def write_bench_json(name: str, rows: List[Any],
+                     path: Optional[str] = None) -> str:
+    """Write the cross-PR trajectory document `BENCH_<name>.json`
+    ({"bench", "schema", "rows"}) and return the path written."""
+    path = path or f"BENCH_{name}.json"
+    doc = {"bench": name, "schema": BENCH_SCHEMA, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def emit(name: str, rows: List[Any], args: argparse.Namespace) -> None:
+    """Finish a bench run: pretty JSON to stdout (or `--out`), plus the
+    machine-readable `BENCH_<name>.json` when `--json` was passed."""
+    doc = json.dumps(rows, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+        sys.stderr.write(f"[{name}] wrote {args.out}\n")
+    else:
+        print(doc)
+    if getattr(args, "json", None):
+        path = write_bench_json(name, rows, args.json)
+        sys.stderr.write(f"[{name}] wrote {path}\n")
 
 
 def stage_network_time(volume_gb: np.ndarray, bw_mbps: np.ndarray) -> float:
-    """Slowest link time in seconds (paper Fig. 2d)."""
-    off = ~np.eye(volume_gb.shape[0], dtype=bool)
-    gb = volume_gb[off]
-    bw = np.maximum(bw_mbps[off], 1e-6)
-    t = (gb * 1000.0) / bw                     # Gb -> Mb over Mbps
-    return float(t.max()) if len(t) else 0.0
+    """Slowest link time in seconds (paper Fig. 2d) — delegates to the
+    placement layer's bottleneck formula so the two can't diverge."""
+    return bottleneck_time_s(volume_gb, bw_mbps)
 
 
 def shuffle_volumes(data_gb: np.ndarray, frac: np.ndarray) -> np.ndarray:

@@ -11,23 +11,31 @@ and reports, per fleet size:
     priority-normalized min BW (bw_j / w_j): 1.0 = perfectly
     weighted-fair.
 
-Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--out FILE]
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py
+          [--out FILE] [--json [PATH]] [--smoke]
+
+`--json` additionally writes the machine-readable BENCH_fleet.json
+trajectory document; `--smoke` shrinks the sweep to 2 fleet sizes x 2
+ticks for CI.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
 import numpy as np
 
+try:
+    from benchmarks.common import bench_parser, emit
+except ImportError:            # run as a script: sys.path[0] is benchmarks/
+    from common import bench_parser, emit
 from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
                          default_fleet_forest)
 from repro.wan.simulator import WanSimulator
 
 QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
 JOB_SIZES = (1, 2, 4, 8)
+SMOKE_JOB_SIZES = (1, 2)
 TICKS = 6
 # priorities cycle 1/2/4 so every fleet size mixes weights
 PRIORITIES = (1.0, 2.0, 4.0)
@@ -51,11 +59,12 @@ def jain_index(xs: np.ndarray) -> float:
     return float(xs.sum() ** 2 / (len(xs) * (xs ** 2).sum()))
 
 
-def bench_fleet(seed: int = 0, ticks: int = TICKS):
+def bench_fleet(seed: int = 0, ticks: int = TICKS, smoke: bool = False):
     """One row per fleet size: latency scaling + weighted fairness."""
     forest = default_fleet_forest()
     rows = []
-    for n_jobs in JOB_SIZES:
+    sizes = SMOKE_JOB_SIZES if smoke else JOB_SIZES
+    for n_jobs in sizes:
         fleet = build_fleet(n_jobs, forest, seed=seed)
         fleet.tick()                              # warm the jit caches
         wall = []
@@ -86,19 +95,11 @@ def bench_fleet(seed: int = 0, ticks: int = TICKS):
 
 def main() -> None:
     """CLI entry point; prints (or writes) one JSON document."""
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--seed", type=int, default=0)
+    ap = bench_parser(__doc__, "fleet")
     ap.add_argument("--ticks", type=int, default=TICKS)
-    ap.add_argument("--out", type=str, default=None,
-                    help="write JSON here instead of stdout")
     args = ap.parse_args()
-    doc = json.dumps(bench_fleet(args.seed, args.ticks), indent=2)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(doc + "\n")
-        sys.stderr.write(f"[fleet] wrote {args.out}\n")
-    else:
-        print(doc)
+    ticks = 2 if args.smoke else args.ticks
+    emit("fleet", bench_fleet(args.seed, ticks, smoke=args.smoke), args)
 
 
 if __name__ == "__main__":

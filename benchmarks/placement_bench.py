@@ -1,0 +1,76 @@
+"""Placement benchmark — the paper's §5 latency/cost comparison as a
+tracked artifact: WANify-predicted-BW placement vs the static
+single-connection ablation, per named scenario x named workload, with
+latency/egress deltas (positive = WANify better).
+
+Run:  PYTHONPATH=src python benchmarks/placement_bench.py
+          [--out FILE] [--json [PATH]] [--smoke]
+
+`--json` writes the machine-readable BENCH_placement.json trajectory
+document (the e2e placement test reproduces the same comparison);
+`--smoke` runs one scenario x one workload at truncated steps for CI.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+try:
+    from benchmarks.common import bench_parser, emit
+except ImportError:            # run as a script: sys.path[0] is benchmarks/
+    from common import bench_parser, emit
+from repro.placement import compare_backends, get_workload
+from repro.scenarios import get_scenario
+
+SCENARIOS = ("skew_ramp", "link_flap", "cable_cut")
+WORKLOADS = ("scan_agg", "two_stage_join", "iterative")
+SMOKE_STEPS = 8
+
+
+def bench_placement(seed: int = 0, smoke: bool = False):
+    """One row per (scenario, workload): totals per backend + deltas."""
+    scenarios = SCENARIOS[:1] if smoke else SCENARIOS
+    workloads = WORKLOADS[:1] if smoke else WORKLOADS
+    rows = []
+    for scen_name in scenarios:
+        for wl in workloads:
+            spec = get_scenario(scen_name)
+            if smoke:
+                spec.steps = min(spec.steps, SMOKE_STEPS)
+            query = get_workload(wl, spec.n_pods)
+            t0 = time.time()
+            r = compare_backends(spec, query=query, seed=seed)
+            rows.append({
+                "scenario": scen_name,
+                "query": wl,
+                "seed": seed,
+                "steps": r["wanify"]["steps"],
+                "makespan_wanify_s":
+                    round(r["wanify"]["makespan_total_s"], 3),
+                "makespan_static_s":
+                    round(r["static"]["makespan_total_s"], 3),
+                "latency_delta_pct": round(r["latency_delta_pct"], 2),
+                "egress_wanify_usd":
+                    round(r["wanify"]["egress_usd_total"], 4),
+                "egress_static_usd":
+                    round(r["static"]["egress_usd_total"], 4),
+                "egress_delta_pct": round(r["egress_delta_pct"], 2),
+                "replacements": r["wanify"]["replacements"],
+                "wall_s": round(time.time() - t0, 3),
+            })
+            sys.stderr.write(
+                f"[placement] {scen_name}/{wl}: "
+                f"lat {rows[-1]['latency_delta_pct']:+.1f}% "
+                f"egress {rows[-1]['egress_delta_pct']:+.1f}% "
+                f"in {rows[-1]['wall_s']}s\n")
+    return rows
+
+
+def main() -> None:
+    """CLI entry point; prints (or writes) one JSON document."""
+    args = bench_parser(__doc__, "placement").parse_args()
+    emit("placement", bench_placement(args.seed, smoke=args.smoke), args)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,12 @@
 repro.scenarios.library through the closed loop and emits one JSON
 document of per-scenario throughput / replan / compile-cache metrics.
 
-Run:  PYTHONPATH=src python benchmarks/scenarios_bench.py [--out FILE]
+Run:  PYTHONPATH=src python benchmarks/scenarios_bench.py
+          [--out FILE] [--json [PATH]] [--smoke]
+
+`--json` additionally writes the machine-readable BENCH_scenarios.json
+trajectory document; `--smoke` truncates every scenario to a few steps
+so CI can run the bench end to end.
 
 Output schema (per scenario):
   {"scenario": ..., "seed": ..., "steps": ..., "replans": {reason: n},
@@ -12,21 +17,27 @@ Output schema (per scenario):
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
+try:
+    from benchmarks.common import bench_parser, emit
+except ImportError:            # run as a script: sys.path[0] is benchmarks/
+    from common import bench_parser, emit
 from repro.scenarios import get_scenario, run_scenario, scenario_names
 
 SEED = 0
+SMOKE_STEPS = 8
 
 
-def bench_scenarios(seed: int = SEED):
+def bench_scenarios(seed: int = SEED, smoke: bool = False):
     rows = []
     for name in scenario_names():
+        spec = get_scenario(name)
+        if smoke:
+            spec.steps = min(spec.steps, SMOKE_STEPS)
         t0 = time.time()
-        res = run_scenario(get_scenario(name), seed=seed)
+        res = run_scenario(spec, seed=seed)
         row = res.summary()
         row["wall_s"] = round(time.time() - t0, 3)
         rows.append(row)
@@ -35,18 +46,8 @@ def bench_scenarios(seed: int = SEED):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--seed", type=int, default=SEED)
-    ap.add_argument("--out", type=str, default=None,
-                    help="write JSON here instead of stdout")
-    args = ap.parse_args()
-    doc = json.dumps(bench_scenarios(args.seed), indent=2)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(doc + "\n")
-        sys.stderr.write(f"[scenarios] wrote {args.out}\n")
-    else:
-        print(doc)
+    args = bench_parser(__doc__, "scenarios", default_seed=SEED).parse_args()
+    emit("scenarios", bench_scenarios(args.seed, smoke=args.smoke), args)
 
 
 if __name__ == "__main__":

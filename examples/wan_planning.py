@@ -1,69 +1,79 @@
-"""WAN planning walkthrough — reproduces the paper's Fig. 2 narrative on
-the calibrated simulator: single connection vs uniform parallelism vs
-heterogeneous connections (+ throttling), with the Fig. 2d network-time
-table. For the closed loop under scripted dynamics (flaps, bursts,
-rescales, deterministic replay) see examples/wan_scenarios.py.
+"""Placement walkthrough — what runtime-BW gauging buys the analytics
+layer (paper §2 and §5): the same geo-distributed query placed from
+static single-connection estimates vs WANify's predicted BW x
+heterogeneous connections, with the latency/cost deltas, then a
+re-placement ride-along under a scripted link flap.
 
 Run:  PYTHONPATH=src python examples/wan_planning.py
+
+(The paper's Fig. 2 BW narrative lives in benchmarks/paper_tables.py
+`bench_fig2`; the closed loop under scripted dynamics is
+examples/wan_scenarios.py.)
 """
 import numpy as np
 
-from repro.control import WanifyController, offset_schedule
-from repro.core.global_opt import global_optimize
-from repro.core.local_opt import AimdAgent
+from repro.control import WanifyController
 from repro.core.predictor import SnapshotPredictor
-from repro.core.relations import infer_dc_relations
+from repro.placement import (PlacementPlanner, compare_backends,
+                             get_workload)
 from repro.wan.simulator import WanSimulator
 
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
 
-def show(name, bw, off):
-    print(f"  {name:22s} min={bw[off].min():7.1f}  max={bw[off].max():7.1f} "
-          f" mean={bw[off].mean():7.1f} Mbps")
+
+def show(tag, cost):
+    print(f"  {tag:28s} makespan={cost.makespan_s:7.1f} s "
+          f"(net {cost.net_s:6.1f})  egress=${cost.egress_usd:6.3f}  "
+          f"total=${cost.total_usd:6.3f}")
 
 
 def main():
-    print("== Fig. 2: 3 DCs (two near, one far) ==")
-    sim = WanSimulator(regions=["us-east", "us-west", "ap-se"], seed=2)
-    off = ~np.eye(3, dtype=bool)
-    show("single connection", sim.measure_simultaneous(np.ones((3, 3))), off)
-    show("uniform 8 conns", sim.measure_simultaneous(np.full((3, 3), 8.0)),
-         off)
-    het = np.array([[0, 2, 11], [2, 0, 13], [11, 13, 0]], float)
-    show("heterogeneous (2c)", sim.measure_simultaneous(het), off)
+    print("== one query, two BW backends (4 DCs of the 8-DC mesh) ==")
+    sim = WanSimulator(seed=3, **QUIET)
+    ctl = WanifyController(sim, SnapshotPredictor(), n_pods=4)
+    ctl.replan(reason="warm")          # capture at the in-force matrix
+    query = get_workload("two_stage_join", 4)
+    print(f"  query: {query.name}, inputs (Gb) = "
+          f"{[round(v, 1) for v in query.input_gb]}")
 
-    print("\n== Algorithm 1 on the paper's worked example ==")
-    bw = np.array([[1000, 400, 120], [380, 1000, 130], [110, 120, 1000]],
-                  float)
-    rel = infer_dc_relations(bw, D=30)
-    print("closeness indices:\n", rel)
-    plan = global_optimize(bw, M=8, D=30)
-    print("maxCons (Eq. 3):\n", plan.max_cons)
+    static = PlacementPlanner(ctl, query, backend="static")
+    wanify = PlacementPlanner(ctl, query, backend="wanify")
+    off = ~np.eye(4, dtype=bool)
+    print(f"  static solo-BW estimate  min={static.priced_bw()[off].min():7.1f} Mbps"
+          f"  (measured pair-at-a-time, everything idle)")
+    print(f"  WANify achievable BW     min={wanify.priced_bw()[off].min():7.1f} Mbps"
+          f"  (predicted x heterogeneous conns)")
 
-    print("\n== full 8-DC plan + AIMD epoch ==")
-    sim8 = WanSimulator(seed=5)
-    pred = sim8.measure_runtime()
-    plan8 = global_optimize(pred, M=8)
-    off8 = ~np.eye(8, dtype=bool)
-    show("single connection", sim8.measure_simultaneous(np.ones((8, 8))),
-         off8)
-    show("WANify (Eq. 3)", sim8.measure_simultaneous(
-        plan8.max_cons.astype(float)), off8)
-    show("WANify + TC", sim8.measure_simultaneous(
-        plan8.max_cons.astype(float), cap=plan8.throttle), off8)
-    agent = AimdAgent.from_plan(plan8, 0)
-    mon = sim8.measure_snapshot(plan8.max_cons.astype(float))[0]
-    before = agent.cons.copy()
-    agent.step(mon)
-    print(f"AIMD (us-east agent): cons {before.tolist()} -> "
-          f"{agent.cons.tolist()}")
+    # execute both placements under the TRUE contended network
+    full = np.ones((sim.N, sim.N))
+    true_static = sim.waterfill(full)[:4, :4]
+    full[:4, :4] = wanify.exec_conns()
+    true_wanify = sim.waterfill(full)[:4, :4]
+    st = static.evaluate(true_static)
+    wa = wanify.evaluate(true_wanify)
+    show("static placement @ 1 conn", st)
+    show("WANify placement @ plan", wa)
+    print(f"  -> latency delta {100 * (1 - wa.makespan_s / st.makespan_s):.1f}%"
+          f", total-cost delta {100 * (1 - wa.total_usd / st.total_usd):.1f}%")
 
-    print("\n== one controller plan + its wire schedule ==")
-    ctl = WanifyController(sim=WanSimulator(seed=7),
-                           predictor=SnapshotPredictor(), n_pods=4)
-    print(f"initial plan: conns={ctl.plan.conns}")
-    print(f"wire schedule: {offset_schedule(ctl.plan)}")
-    print("(driving this loop through scripted WAN dynamics lives in "
-          "examples/wan_scenarios.py)")
+    print("\n== re-placement under a scripted link flap ==")
+    r = compare_backends("link_flap", query=query, seed=0)
+    w, s = r["wanify"], r["static"]
+    print(f"  30 steps, us-east<->us-west collapses at 10, restores at 20")
+    print(f"  WANify: re-placed {w['replacements']}x, "
+          f"makespan total {w['makespan_total_s']:.0f} s")
+    print(f"  static: placed once,  "
+          f"makespan total {s['makespan_total_s']:.0f} s")
+    print(f"  -> latency delta {r['latency_delta_pct']:.1f}%, "
+          f"egress delta {r['egress_delta_pct']:.1f}%")
+
+    print("\n== the paper's skew setting (skew_ramp) ==")
+    r = compare_backends("skew_ramp", query=query, seed=0)
+    print(f"  latency delta {r['latency_delta_pct']:.1f}%, "
+          f"egress delta {r['egress_delta_pct']:.1f}% "
+          f"(positive = WANify better on both)")
+    print("  (benchmarks/placement_bench.py sweeps scenario x workload "
+          "and writes BENCH_placement.json)")
 
 
 if __name__ == "__main__":

@@ -118,6 +118,19 @@ class WanifyController:
         takes effect at the next replan."""
         self.envelope = envelope
 
+    def add_trace_hook(self, fn: Callable[[Dict[str, Any]], None]) -> None:
+        """Compose `fn` onto the replan trace stream, keeping any hook
+        already installed — the scenario engine's tap and a placement
+        planner's re-place trigger can both listen to one controller."""
+        prev = self.trace_hook
+        if prev is None:
+            self.trace_hook = fn
+        else:
+            def both(rec, _prev=prev, _fn=fn):
+                _prev(rec)
+                _fn(rec)
+            self.trace_hook = both
+
     def replan(self, skew_w: Optional[np.ndarray] = None,
                reason: str = "explicit",
                step: Optional[int] = None, *,
@@ -134,6 +147,11 @@ class WanifyController:
         comes from the capture's snapshot.
         """
         conns = self.current_conns()
+        # the matrix the snapshot was measured at: consumers scaling
+        # predicted BW to a different connection count (the placement
+        # planner's achievable-BW pricing) scale from this operating
+        # point via the paper's BW-grows-linearly-with-conns claim
+        self.last_capture_conns = conns
         if capture is None:
             _, capture = self.monitor.capture(conns)
         raw = capture

@@ -136,6 +136,17 @@ class FleetController:
         self.jobs[name].priority = float(priority)
         self.events.append(f"job {name} priority -> {priority}")
 
+    def job_planner(self, name: str, query, **kwargs):
+        """Attach a :class:`repro.placement.PlacementPlanner` to one
+        admitted job: the planner prices the query against the job's
+        arbitrated :class:`BudgetEnvelope` (its `link_cap` clamps the
+        achievable BW), and re-places on every fleet-tick replan. A
+        low-priority tenant therefore plans around its fair share of a
+        contended link, not the raw capacity."""
+        from repro.placement.planner import PlacementPlanner
+        return PlacementPlanner(self.jobs[name].controller, query,
+                                **kwargs)
+
     # ------------------------------------------------------------------
     # the arbitrated, batched fleet tick
     # ------------------------------------------------------------------

@@ -1,0 +1,43 @@
+"""repro.placement — the GDA query layer that consumes WANify BW.
+
+The paper's value proposition is that accurate runtime WAN bandwidth
+lets geo-distributed analytics place tasks and data better (§2, §5);
+this package is that consumer: a stage-DAG query model with named
+workloads (`query.py`), a latency + egress-cost estimator priced
+against predicted-BW x heterogeneous connections (`cost.py`), a
+deterministic placement search with an exhaustive reference
+(`optimizer.py`), a :class:`PlacementPlanner` that re-places on every
+controller replan trigger (`planner.py`), and scripted placement runs
+with byte-replayable traces plus the static-BW ablation comparison
+(`scenario.py`). See DESIGN.md ("The placement planner").
+"""
+from repro.placement.cost import (INSTANCE_USD_PER_HOUR, PlacementCost,
+                                  StageCost, achievable_bw,
+                                  bottleneck_time_s, estimate_cost,
+                                  shuffle_matrix)
+from repro.placement.optimizer import (PlacementDecision, better,
+                                       exhaustive_place, greedy_place,
+                                       initial_placement)
+from repro.placement.planner import (BACKENDS, PlacementPlanner,
+                                     PlacementRecord)
+from repro.placement.query import (WORKLOADS, QuerySpec, Stage,
+                                   get_workload, iterative, scan_agg,
+                                   skewed_partitions, two_stage_join,
+                                   workload_names)
+from repro.placement.scenario import (PlacementScenarioResult,
+                                      PlacementStepTrace, PlacementTrace,
+                                      compare_backends,
+                                      run_placement_scenario)
+
+__all__ = [
+    "QuerySpec", "Stage", "skewed_partitions",
+    "WORKLOADS", "get_workload", "workload_names",
+    "scan_agg", "two_stage_join", "iterative",
+    "PlacementCost", "StageCost", "estimate_cost", "achievable_bw",
+    "shuffle_matrix", "bottleneck_time_s", "INSTANCE_USD_PER_HOUR",
+    "PlacementDecision", "greedy_place", "exhaustive_place",
+    "initial_placement", "better",
+    "PlacementPlanner", "PlacementRecord", "BACKENDS",
+    "PlacementTrace", "PlacementStepTrace", "PlacementScenarioResult",
+    "run_placement_scenario", "compare_backends",
+]

@@ -1,0 +1,188 @@
+"""Placement cost model — latency + egress cost of one candidate
+placement, priced against per-pair achievable WAN bandwidth.
+
+Latency follows the paper's bottleneck formula (Fig. 2d): a shuffle
+moving `V[i,j]` Gb finishes in `max_ij V_ij / BW_ij`; stage compute is
+the slowest DC's assigned volume over its compute speed; a stage with
+`waves > 1` repeats both. Cost is AWS-style: instance time (every DC
+runs for the makespan) plus per-GB egress priced at each *source*
+region's rate (`repro.wan.monitor.egress_price_vector`).
+
+Achievable BW comes from the control plane: `achievable_bw(plan)` is
+the plan's predicted single-connection BW x its heterogeneous
+connection counts (the Eq. 2-3 linearity the paper validates
+empirically), optionally clamped by an arbitrated fleet envelope's
+`link_cap`. Tests validate this pricing against the `WanSimulator`
+water-fill ground truth (`tests/test_placement.py`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.plan import WanPlan
+from repro.placement.query import QuerySpec
+from repro.wan.monitor import NET_COST_PER_GB
+from repro.wan.topology import INTRA_DC_BW, KNEE_CONNS
+
+# t2.medium + vCPU burst, the paper's worker class (same basis as the
+# benchmark query model)
+INSTANCE_USD_PER_HOUR = 0.0464 + 2 * 0.05
+
+
+def achievable_bw(plan: WanPlan,
+                  link_cap: Optional[np.ndarray] = None,
+                  capture_conns: Optional[np.ndarray] = None,
+                  knee: Optional[float] = KNEE_CONNS,
+                  intra_dc_bw: float = INTRA_DC_BW) -> np.ndarray:
+    """Per-pair achievable BW [P,P] in Mbps a placement prices against:
+    predicted BW x connection count — the paper's "runtime BW grows
+    linearly with the connections" — scaled from the operating point
+    the prediction was measured at and saturated at the §2.2
+    parallelism knee.
+
+    `capture_conns` is the operating point
+    (`WanifyController.last_capture_conns`, pod-sliced): when the
+    snapshot was taken at the in-force matrix, the predicted BW is
+    already the aggregate there and only the *ratio* to the plan's
+    conns applies; the default (ones, a from-scratch capture) reduces
+    to plain predicted-BW x conns. `knee` caps the effective
+    connection count on both sides of the ratio (parallelism gains
+    saturate ~8-9 streams; `None` = pure linearity). An arbitrated
+    fleet envelope's `link_cap` clamps the result. Diagonal = intra-DC
+    BW."""
+    pred = np.asarray(plan.pred_bw, np.float64)
+    conns = np.asarray(plan.conns, np.float64)
+    if capture_conns is None:
+        base = np.ones_like(conns)
+    else:
+        base = np.maximum(np.asarray(capture_conns, np.float64), 1.0)
+        if base.shape != conns.shape:
+            raise ValueError(
+                f"capture_conns shape {base.shape} != plan scale "
+                f"{conns.shape}")
+    if knee is not None:
+        conns = np.minimum(conns, knee)
+        base = np.minimum(base, knee)
+    bw = pred * conns / base
+    if link_cap is not None:
+        cap = np.asarray(link_cap, np.float64)
+        if cap.shape != bw.shape:
+            raise ValueError(
+                f"link_cap shape {cap.shape} != plan scale {bw.shape}")
+        off = ~np.eye(plan.n_pods, dtype=bool)
+        bw[off] = np.minimum(bw, cap)[off]
+    np.fill_diagonal(bw, intra_dc_bw)
+    return bw
+
+
+def shuffle_matrix(held_gb: np.ndarray, frac: np.ndarray) -> np.ndarray:
+    """All-to-all shuffle volumes [N,N] (Gb): DC i ships
+    `held_i * frac_j` to DC j; the diagonal (data that stays) is 0."""
+    v = np.outer(np.asarray(held_gb, np.float64),
+                 np.asarray(frac, np.float64))
+    np.fill_diagonal(v, 0.0)
+    return v
+
+
+def bottleneck_time_s(volume_gb: np.ndarray, bw_mbps: np.ndarray) -> float:
+    """Slowest-link shuffle time in seconds (paper Fig. 2d):
+    `max_ij V_ij / BW_ij` over off-diagonal pairs."""
+    off = ~np.eye(volume_gb.shape[0], dtype=bool)
+    gb = volume_gb[off]
+    bw = np.maximum(bw_mbps[off], 1e-6)
+    t = gb * 1000.0 / bw                       # Gb -> Mb over Mbps
+    return float(t.max()) if len(t) else 0.0
+
+
+@dataclass(frozen=True)
+class StageCost:
+    """One placed stage's contribution (already multiplied by waves)."""
+
+    name: str
+    net_s: float
+    compute_s: float
+    egress_gb: float          # GB shipped off-DC (all waves)
+
+
+@dataclass(frozen=True)
+class PlacementCost:
+    """Estimated execution of one placement: latency plus dollars."""
+
+    makespan_s: float
+    net_s: float
+    compute_s: float
+    egress_gb: float          # GB
+    egress_usd: float
+    instance_usd: float
+    stages: Tuple[StageCost, ...]
+
+    @property
+    def total_usd(self) -> float:
+        """Instance time + egress, the paper's §5 cost metric."""
+        return self.instance_usd + self.egress_usd
+
+
+def estimate_cost(query: QuerySpec, placement: np.ndarray,
+                  bw_mbps: np.ndarray, *,
+                  egress_usd_per_gb: Union[float, np.ndarray, None] = None,
+                  instance_usd_per_hour: float = INSTANCE_USD_PER_HOUR
+                  ) -> PlacementCost:
+    """Price `placement` ([n_shuffles, N] task fractions, rows sum to 1)
+    against per-pair `bw_mbps` [N,N].
+
+    `egress_usd_per_gb` is a scalar or per-source-DC vector (default:
+    the Table-2 average rate). Returns the full latency/cost breakdown;
+    the optimizer minimizes `makespan_s` with `egress_usd` as the
+    near-tie preference.
+    """
+    n = query.n
+    bw = np.asarray(bw_mbps, np.float64)
+    if bw.shape != (n, n):
+        raise ValueError(f"bw shape {bw.shape} != ({n}, {n})")
+    placement = np.atleast_2d(np.asarray(placement, np.float64))
+    if placement.shape != (query.n_shuffles(), n):
+        raise ValueError(
+            f"placement shape {placement.shape} != "
+            f"({query.n_shuffles()}, {n})")
+    if (placement < -1e-9).any() or \
+            not np.allclose(placement.sum(axis=1), 1.0, atol=1e-6):
+        raise ValueError("each stage's fractions must be >= 0, sum to 1")
+    price = np.full(n, NET_COST_PER_GB) if egress_usd_per_gb is None \
+        else np.broadcast_to(
+            np.asarray(egress_usd_per_gb, np.float64), (n,))
+    speed = query.speeds()
+
+    held = query.inputs()
+    s0 = query.stages[0]
+    compute_s = s0.waves * float(
+        (held * s0.compute_s_per_gb / speed).max())
+    net_s = 0.0
+    egress_gb = 0.0
+    egress_usd = 0.0
+    rows = [StageCost(s0.name, 0.0, compute_s, 0.0)]
+    held = held * s0.out_ratio
+    for k, stage in enumerate(query.stages[1:]):
+        frac = placement[k]
+        vol = shuffle_matrix(held, frac)
+        st_net = stage.waves * bottleneck_time_s(vol, bw)
+        new_held = held.sum() * frac
+        st_comp = stage.waves * float(
+            (new_held * stage.compute_s_per_gb / speed).max())
+        st_gb = stage.waves * float(vol.sum()) / 8.0        # Gb -> GB
+        st_usd = stage.waves * float(
+            (vol.sum(axis=1) / 8.0 * price).sum())
+        rows.append(StageCost(stage.name, st_net, st_comp, st_gb))
+        net_s += st_net
+        compute_s += st_comp
+        egress_gb += st_gb
+        egress_usd += st_usd
+        held = new_held * stage.out_ratio
+    makespan = net_s + compute_s
+    instance_usd = makespan / 3600.0 * n * instance_usd_per_hour
+    return PlacementCost(makespan_s=makespan, net_s=net_s,
+                         compute_s=compute_s, egress_gb=egress_gb,
+                         egress_usd=egress_usd, instance_usd=instance_usd,
+                         stages=tuple(rows))

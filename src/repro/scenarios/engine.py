@@ -71,6 +71,10 @@ class ScenarioEngine:
             sim=self.sim, predictor=predictor or SnapshotPredictor(),
             n_pods=spec.n_pods, cfg=cfg)
         self.step = 0
+        # a per-step tap for ride-along harnesses (repro.placement):
+        # called as step_hook(engine, step_trace_row) after each step's
+        # trace row is appended; it must not mutate sim/controller state
+        self.step_hook: Optional[Any] = None
         # scripted-process state (mutated by events)
         self.diurnal: Optional[Tuple[float, int, int]] = None
         self.straggler_mult = 1.0
@@ -203,6 +207,8 @@ class ScenarioEngine:
                 cache_builds=ctl.cache_builds,
                 cache_hits=ctl.cache_hits,
             ))
+            if self.step_hook is not None:
+                self.step_hook(self, trace.steps[-1])
         return ScenarioResult(trace=trace, payload_mb=self.spec.payload_mb)
 
 

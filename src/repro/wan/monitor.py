@@ -15,6 +15,22 @@ from repro.wan.simulator import WanSimulator
 # ---- Table 2 cost constants ------------------------------------------
 T3_NANO_PER_SEC = 0.0052 / 3600.0       # $/instance-second
 NET_COST_PER_GB = 0.09                  # $/GB egress (inter-region avg)
+
+# AWS list-price egress ($/GB) per source region of the 8-DC testbed —
+# the placement cost layer (repro.placement.cost) prices each DC's
+# shuffle egress at its own source rate instead of the Table-2 average.
+EGRESS_USD_PER_GB = {
+    "us-east": 0.09, "us-west": 0.09, "eu-west": 0.09,
+    "ap-south": 0.1093, "ap-se": 0.12, "ap-se2": 0.114,
+    "ap-ne": 0.114, "sa-east": 0.15,
+}
+
+
+def egress_price_vector(regions) -> np.ndarray:
+    """Per-DC egress $/GB for named regions (unknown regions fall back
+    to the Table-2 average `NET_COST_PER_GB`)."""
+    return np.array([EGRESS_USD_PER_GB.get(r, NET_COST_PER_GB)
+                     for r in regions], np.float64)
 MONITOR_SECONDS = 20.0                  # stable runtime needs >=20 s
 SNAPSHOT_SECONDS = 1.0
 MONITOR_EVERY_MIN = 30.0                # Tetrium's suggestion

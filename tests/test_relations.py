@@ -38,6 +38,45 @@ def test_filtering_merges_close_values():
     assert len(set(off.tolist())) == 1
 
 
+def test_huge_D_collapses_everything_to_one_class():
+    # D larger than every BW gap: the reverse traversal filters the
+    # unique list down to its smallest entry, so every pair (diagonal
+    # included) lands in closeness class 1
+    bw = np.array([[1000.0, 950, 920],
+                   [950, 1000, 910],
+                   [920, 910, 1000]])
+    rel = infer_dc_relations(bw, D=1e6)
+    np.testing.assert_array_equal(rel, np.ones((3, 3), np.int64))
+
+
+def test_asymmetric_bw_yields_asymmetric_relations():
+    # i->j and j->i are independent measurements (directional routing /
+    # provider asymmetry); closeness follows each direction's own BW
+    bw = np.array([[1000.0, 800, 120],
+                   [300, 1000, 130],
+                   [110, 600, 1000]])
+    rel = infer_dc_relations(bw, D=50)
+    assert rel[0, 1] != rel[1, 0]          # 800 vs 300
+    assert rel[1, 0] > rel[0, 1]           # weaker direction = farther
+    assert rel[2, 1] < rel[1, 2]           # 600 vs 130
+    # every direction still monotone: weaker BW never gets a closer index
+    off = ~np.eye(3, dtype=bool)
+    flat_bw, flat_rel = bw[off], rel[off]
+    order = np.argsort(flat_bw)
+    assert (np.diff(flat_rel[order]) <= 0).all()
+
+
+def test_all_equal_offdiagonal_is_single_class_behind_diagonal():
+    # a perfectly homogeneous mesh: every WAN pair shares one class,
+    # strictly behind the intra-DC diagonal
+    bw = np.full((4, 4), 500.0)
+    np.fill_diagonal(bw, 1000.0)
+    rel = infer_dc_relations(bw, D=30)
+    off = ~np.eye(4, dtype=bool)
+    assert set(rel[off].tolist()) == {2}
+    assert (np.diag(rel) == 1).all()
+
+
 def test_monotone_weaker_link_larger_index():
     bw = np.array([[1000.0, 900, 300, 100],
                    [900, 1000, 350, 120],

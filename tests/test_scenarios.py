@@ -48,6 +48,17 @@ def test_different_seeds_diverge(results):
     assert a.to_json() != b.to_json()
 
 
+def test_step_hook_sees_every_step():
+    """The per-step tap (ride-along harnesses, e.g. repro.placement)
+    fires once per step with the engine and the just-appended row."""
+    eng = ScenarioEngine(get_scenario("steady"), seed=0)
+    seen = []
+    eng.step_hook = lambda engine, row: seen.append(
+        (row.step, engine.controller.n_pods))
+    res = eng.run()
+    assert [s for s, _ in seen] == [r.step for r in res.trace.steps]
+
+
 def test_measurement_interleaving_does_not_change_replay():
     """The RNG-stream split in action: an extra host_metrics draw does
     not shift subsequent observation noise, so a consumer polling extra
