@@ -1,39 +1,51 @@
-"""Placement benchmark — the paper's §5 latency/cost comparison as a
-tracked artifact: WANify-predicted-BW placement vs the static
-single-connection ablation, per named scenario x named workload, with
-latency/egress deltas (positive = WANify better).
+"""Placement benchmark — the paper's §5 latency/cost comparison plus
+the placement-search engine's throughput, as one tracked artifact.
+
+Two row kinds land in `BENCH_placement.json`:
+
+  * ``kind="scenario"`` — WANify-predicted-BW placement vs the static
+    single-connection ablation, the FULL scenario x workload grid
+    (latency/egress deltas, positive = WANify better);
+  * ``kind="search"`` — the search microbenchmark: one full
+    `greedy_place` per backend (scalar one-eval-per-move reference vs
+    batched numpy vs batched jax) at N in {4, 8, 16}, reporting
+    ``evals_per_s`` — the perf contract is batched >= 10x scalar at
+    N=8 (CI smoke-guards a generous 2x so the artifact can't rot).
 
 Run:  PYTHONPATH=src python benchmarks/placement_bench.py
-          [--out FILE] [--json [PATH]] [--smoke]
+          [--out FILE] [--json [PATH]] [--smoke] [--search]
 
 `--json` writes the machine-readable BENCH_placement.json trajectory
-document (the e2e placement test reproduces the same comparison);
-`--smoke` runs one scenario x one workload at truncated steps for CI.
+document; `--smoke` truncates steps/sizes for CI; `--search` runs only
+the search microbenchmark rows.
 """
 from __future__ import annotations
 
 import sys
 import time
 
+import numpy as np
+
 try:
     from benchmarks.common import bench_parser, emit
 except ImportError:            # run as a script: sys.path[0] is benchmarks/
     from common import bench_parser, emit
-from repro.placement import compare_backends, get_workload
+from repro.placement import compare_backends, get_workload, greedy_place
 from repro.scenarios import get_scenario
 
 SCENARIOS = ("skew_ramp", "link_flap", "cable_cut")
 WORKLOADS = ("scan_agg", "two_stage_join", "iterative")
-SMOKE_STEPS = 8
+SEARCH_BACKENDS = ("scalar", "numpy", "jax")
+SEARCH_SIZES = (4, 8, 16)
+SMOKE_STEPS = 6
 
 
 def bench_placement(seed: int = 0, smoke: bool = False):
-    """One row per (scenario, workload): totals per backend + deltas."""
-    scenarios = SCENARIOS[:1] if smoke else SCENARIOS
-    workloads = WORKLOADS[:1] if smoke else WORKLOADS
+    """One row per (scenario, workload) over the full grid: totals per
+    backend + deltas (smoke only truncates the per-scenario steps)."""
     rows = []
-    for scen_name in scenarios:
-        for wl in workloads:
+    for scen_name in SCENARIOS:
+        for wl in WORKLOADS:
             spec = get_scenario(scen_name)
             if smoke:
                 spec.steps = min(spec.steps, SMOKE_STEPS)
@@ -41,6 +53,7 @@ def bench_placement(seed: int = 0, smoke: bool = False):
             t0 = time.time()
             r = compare_backends(spec, query=query, seed=seed)
             rows.append({
+                "kind": "scenario",
                 "scenario": scen_name,
                 "query": wl,
                 "seed": seed,
@@ -66,10 +79,56 @@ def bench_placement(seed: int = 0, smoke: bool = False):
     return rows
 
 
+def bench_search(seed: int = 0, smoke: bool = False):
+    """The search microbenchmark: a full `greedy_place` on the default
+    workload per backend and DC count, timed after a warm-up run (the
+    jax row amortizes its bucket compiles), reporting `evals_per_s`."""
+    rows = []
+    sizes = (8,) if smoke else SEARCH_SIZES
+    repeats = 1 if smoke else 3
+    rng = np.random.default_rng(seed)
+    for n in sizes:
+        query = get_workload("scan_agg", n)
+        bw = rng.uniform(50.0, 2000.0, (n, n))
+        np.fill_diagonal(bw, 100000.0)
+        price = rng.uniform(0.02, 0.12, n)
+        for backend in SEARCH_BACKENDS:
+            decision = greedy_place(query, bw, egress_usd_per_gb=price,
+                                    backend=backend)      # warm-up
+            wall = np.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                decision = greedy_place(query, bw,
+                                        egress_usd_per_gb=price,
+                                        backend=backend)
+                wall = min(wall, time.perf_counter() - t0)
+            rows.append({
+                "kind": "search",
+                "query": "scan_agg",
+                "n_dcs": n,
+                "backend": backend,
+                "seed": seed,
+                "evals": decision.evals,
+                "wall_s": round(wall, 5),
+                "evals_per_s": round(decision.evals / wall, 1),
+            })
+            sys.stderr.write(
+                f"[placement] search N={n} {backend}: "
+                f"{rows[-1]['evals_per_s']:,.0f} evals/s "
+                f"({decision.evals} evals in {wall:.4f}s)\n")
+    return rows
+
+
 def main() -> None:
     """CLI entry point; prints (or writes) one JSON document."""
-    args = bench_parser(__doc__, "placement").parse_args()
-    emit("placement", bench_placement(args.seed, smoke=args.smoke), args)
+    ap = bench_parser(__doc__, "placement")
+    ap.add_argument("--search", action="store_true",
+                    help="run only the search-microbenchmark rows")
+    args = ap.parse_args()
+    rows = [] if args.search else bench_placement(args.seed,
+                                                  smoke=args.smoke)
+    rows += bench_search(args.seed, smoke=args.smoke)
+    emit("placement", rows, args)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,12 @@ static measurement gets wrong. The fleet controller closes that gap:
   ONCE for the whole fleet (:class:`BatchedRfPredictor`);
 * achieved BW is solved with ONE fleet-wide water-fill
   (`waterfill_tenants`) and credited per tenant, with each job's
-  envelope cap applied as TC shaping.
+  envelope cap applied as TC shaping;
+* attached placement planners (:meth:`FleetController.job_planner`)
+  run DEFERRED: the tick flushes every job's pending re-placement
+  through one `placement.optimizer.search_many` lock-step pass, fusing
+  same-shape search rounds across jobs into shared batched-evaluator
+  launches instead of J independent Python searches.
 
 A fleet tick is one arbitration epoch (the paper's 5-second local-
 optimizer cadence, fleet-wide): all active jobs replan together so the
@@ -94,6 +99,7 @@ class FleetController:
         self.jobs: Dict[str, FleetJob] = {}
         self.tick_count = 0
         self.events: List[str] = []
+        self._planners: List[Tuple[str, Any]] = []
         for spec in jobs:
             self.add_job(spec)
 
@@ -129,6 +135,7 @@ class FleetController:
         at the next tick (their envelopes grow into the freed share)."""
         job = self.jobs.pop(name)
         job.view.unregister()
+        self._planners = [(n, p) for n, p in self._planners if n != name]
         self.events.append(f"job {name} departed")
 
     def set_priority(self, name: str, priority: float) -> None:
@@ -142,10 +149,39 @@ class FleetController:
         arbitrated :class:`BudgetEnvelope` (its `link_cap` clamps the
         achievable BW), and re-places on every fleet-tick replan. A
         low-priority tenant therefore plans around its fair share of a
-        contended link, not the raw capacity."""
+        contended link, not the raw capacity.
+
+        Fleet planners run DEFERRED: a tick's replans only mark each
+        planner pending, and :meth:`tick` flushes all J pending
+        searches through one `placement.optimizer.search_many`
+        lock-step pass — same-shape rounds across jobs fuse into
+        single batched-evaluator launches instead of J independent
+        Python searches."""
         from repro.placement.planner import PlacementPlanner
-        return PlacementPlanner(self.jobs[name].controller, query,
-                                **kwargs)
+        planner = PlacementPlanner(self.jobs[name].controller, query,
+                                   **kwargs)
+        planner.defer_replans()
+        self._planners.append((name, planner))
+        return planner
+
+    def _flush_planners(self) -> None:
+        """Run every pending deferred placement search in one fused
+        `search_many` pass and commit the results (detached planners —
+        the documented replacement flow — are pruned here, so a job
+        that rotates planners doesn't accumulate dead entries)."""
+        from repro.placement.optimizer import search_many
+        self._planners = [(n, p) for n, p in self._planners
+                          if not p._detached]
+        owners, tasks = [], []
+        for _, planner in self._planners:
+            task = planner.pending_task()
+            if task is not None:
+                owners.append(planner)
+                tasks.append(task)
+        if not tasks:
+            return
+        for planner, decision in zip(owners, search_many(tasks)):
+            planner.commit(decision)
 
     # ------------------------------------------------------------------
     # the arbitrated, batched fleet tick
@@ -206,6 +242,7 @@ class FleetController:
                                       step=self.tick_count,
                                       capture=raw, pred=pred)
                 job.view.register(job.controller.current_conns())
+        self._flush_planners()
         achieved = self.achieved()
         for job in self.jobs.values():
             P = job.controller.n_pods

@@ -4,20 +4,27 @@ The paper's value proposition is that accurate runtime WAN bandwidth
 lets geo-distributed analytics place tasks and data better (§2, §5);
 this package is that consumer: a stage-DAG query model with named
 workloads (`query.py`), a latency + egress-cost estimator priced
-against predicted-BW x heterogeneous connections (`cost.py`), a
-deterministic placement search with an exhaustive reference
-(`optimizer.py`), a :class:`PlacementPlanner` that re-places on every
-controller replan trigger (`planner.py`), and scripted placement runs
-with byte-replayable traces plus the static-BW ablation comparison
-(`scenario.py`). See DESIGN.md ("The placement planner").
+against predicted-BW x heterogeneous connections — with a batched
+evaluator that prices thousands of candidates per launch
+(`cost.py::estimate_cost_batch`, numpy bit-exact / jax jit backends) —
+a deterministic batched placement search with an exhaustive reference
+and a lock-step multi-job driver (`optimizer.py`), a
+:class:`PlacementPlanner` that re-places on every controller replan
+trigger (`planner.py`), and scripted placement runs with
+byte-replayable traces plus the static-BW ablation comparison
+(`scenario.py`). See DESIGN.md ("The placement planner", "Batched
+placement search").
 """
-from repro.placement.cost import (INSTANCE_USD_PER_HOUR, PlacementCost,
-                                  StageCost, achievable_bw,
-                                  bottleneck_time_s, estimate_cost,
-                                  shuffle_matrix)
-from repro.placement.optimizer import (PlacementDecision, better,
-                                       exhaustive_place, greedy_place,
-                                       initial_placement)
+from repro.placement.cost import (INSTANCE_USD_PER_HOUR,
+                                  PLACEMENT_BACKENDS, PlacementCost,
+                                  PlacementCostBatch, StageCost,
+                                  achievable_bw, bottleneck_time_s,
+                                  estimate_cost, estimate_cost_batch,
+                                  placement_backend, shuffle_matrix)
+from repro.placement.optimizer import (PlacementDecision, SearchTask,
+                                       better, exhaustive_place,
+                                       greedy_place, initial_placement,
+                                       search_many)
 from repro.placement.planner import (BACKENDS, PlacementPlanner,
                                      PlacementRecord)
 from repro.placement.query import (WORKLOADS, QuerySpec, Stage,
@@ -35,8 +42,10 @@ __all__ = [
     "scan_agg", "two_stage_join", "iterative",
     "PlacementCost", "StageCost", "estimate_cost", "achievable_bw",
     "shuffle_matrix", "bottleneck_time_s", "INSTANCE_USD_PER_HOUR",
+    "PlacementCostBatch", "estimate_cost_batch", "placement_backend",
+    "PLACEMENT_BACKENDS",
     "PlacementDecision", "greedy_place", "exhaustive_place",
-    "initial_placement", "better",
+    "initial_placement", "better", "SearchTask", "search_many",
     "PlacementPlanner", "PlacementRecord", "BACKENDS",
     "PlacementTrace", "PlacementStepTrace", "PlacementScenarioResult",
     "run_placement_scenario", "compare_backends",

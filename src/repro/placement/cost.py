@@ -17,8 +17,9 @@ water-fill ground truth (`tests/test_placement.py`).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
-from typing import Optional, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
@@ -186,3 +187,205 @@ def estimate_cost(query: QuerySpec, placement: np.ndarray,
                          compute_s=compute_s, egress_gb=egress_gb,
                          egress_usd=egress_usd, instance_usd=instance_usd,
                          stages=tuple(rows))
+
+
+# ----------------------------------------------------------------------
+# Batched evaluation — price M candidate placements in one pass
+# ----------------------------------------------------------------------
+PLACEMENT_BACKENDS = ("numpy", "jax", "scalar")
+
+
+def placement_backend(backend: Optional[str] = None) -> str:
+    """Resolve the batched-evaluator backend: an explicit argument wins,
+    then the ``REPRO_PLACEMENT_BACKEND`` environment variable, then
+    ``numpy``. ``scalar`` routes every candidate through the readable
+    per-placement :func:`estimate_cost` reference (tests/benchmarks)."""
+    if backend is None:
+        backend = os.environ.get("REPRO_PLACEMENT_BACKEND", "numpy")
+    if backend not in PLACEMENT_BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {PLACEMENT_BACKENDS}")
+    return backend
+
+
+@dataclass(frozen=True)
+class PlacementCostBatch:
+    """Per-candidate cost vectors for a batch of M placements — the
+    same numbers :class:`PlacementCost` carries, without the per-stage
+    breakdown (built lazily, winner-only, via :func:`estimate_cost`)."""
+
+    makespan_s: np.ndarray            # [M]
+    net_s: np.ndarray                 # [M]
+    compute_s: np.ndarray             # [M]
+    egress_gb: np.ndarray             # [M]
+    egress_usd: np.ndarray            # [M]
+    instance_usd: np.ndarray          # [M]
+
+    def __len__(self) -> int:
+        return len(self.makespan_s)
+
+    @property
+    def total_usd(self) -> np.ndarray:
+        """Instance time + egress per candidate (the §5 cost metric)."""
+        return self.instance_usd + self.egress_usd
+
+
+def _price_vector(egress_usd_per_gb, n: int) -> np.ndarray:
+    """The per-source-DC egress rate vector the scalar path uses."""
+    if egress_usd_per_gb is None:
+        return np.full(n, NET_COST_PER_GB)
+    return np.broadcast_to(
+        np.asarray(egress_usd_per_gb, np.float64), (n,))
+
+
+def pack_query(query: QuerySpec, egress_usd_per_gb=None
+               ) -> Dict[str, np.ndarray]:
+    """The query's stage chain as flat arrays for the packed evaluator:
+    ``inputs``/``speed``/``price`` [N] and ``out_ratio``/``comp_s``/
+    ``waves`` [S+1] (stage 0 first)."""
+    return {
+        "inputs": query.inputs(),
+        "speed": query.speeds(),
+        "price": _price_vector(egress_usd_per_gb, query.n),
+        "out_ratio": np.array([s.out_ratio for s in query.stages],
+                              np.float64),
+        "comp_s": np.array([s.compute_s_per_gb for s in query.stages],
+                           np.float64),
+        "waves": np.array([float(s.waves) for s in query.stages],
+                          np.float64),
+    }
+
+
+def _eval_packed_numpy(placements: np.ndarray, bw: np.ndarray,
+                       inputs: np.ndarray, speed: np.ndarray,
+                       price: np.ndarray, out_ratio: np.ndarray,
+                       comp_s: np.ndarray, waves: np.ndarray,
+                       instance_usd_per_hour) -> PlacementCostBatch:
+    """The vectorized core: one pass over all M candidates.
+
+    `placements` is [M, S, N]; every other input is either shared
+    ([N], [N,N], [S+1]) or per-candidate ([M,N], [M,N,N], [M,S+1]) —
+    per-candidate forms let the fleet driver fuse different jobs'
+    searches into one launch. Reduction order matches the scalar
+    :func:`estimate_cost` exactly (row-wise sums over the same
+    contiguous axes, order-independent maxes), so the per-candidate
+    outputs are bit-identical to the scalar reference — the property
+    `tests/test_placement_batch.py` pins.
+    """
+    M, S, N = placements.shape
+    bw3 = bw if bw.ndim == 3 else bw[None]
+    bwc = np.maximum(bw3, 1e-6)
+    inputs2 = inputs if inputs.ndim == 2 else inputs[None]
+    speed2 = speed if speed.ndim == 2 else speed[None]
+    price2 = price if price.ndim == 2 else price[None]
+    out2 = out_ratio if out_ratio.ndim == 2 else out_ratio[None]
+    comp2 = comp_s if comp_s.ndim == 2 else comp_s[None]
+    waves2 = waves if waves.ndim == 2 else waves[None]
+    off = ~np.eye(N, dtype=bool)
+    diag = np.arange(N)
+
+    compute_s = waves2[:, 0] * (inputs2 * comp2[:, 0:1] / speed2).max(axis=1)
+    held = inputs2 * out2[:, 0:1]
+    net_s = np.zeros(1)
+    egress_gb = np.zeros(1)
+    egress_usd = np.zeros(1)
+    for k in range(1, S + 1):
+        frac = placements[:, k - 1, :]
+        vol = held[:, :, None] * frac[:, None, :]          # [M,N,N]
+        vol[:, diag, diag] = 0.0
+        t = vol * 1000.0 / bwc
+        st_net = waves2[:, k] * t[:, off].max(axis=1)
+        new_held = held.sum(axis=1)[:, None] * frac
+        st_comp = waves2[:, k] * (new_held * comp2[:, k:k + 1]
+                                  / speed2).max(axis=1)
+        st_gb = waves2[:, k] * vol.reshape(M, -1).sum(axis=1) / 8.0
+        st_usd = waves2[:, k] * ((vol.sum(axis=2) / 8.0
+                                  * price2).sum(axis=1))
+        net_s = net_s + st_net
+        compute_s = compute_s + st_comp
+        egress_gb = egress_gb + st_gb
+        egress_usd = egress_usd + st_usd
+        held = new_held * out2[:, k:k + 1]
+    makespan = np.broadcast_to(net_s + compute_s, (M,))
+    instance = makespan / 3600.0 * N * instance_usd_per_hour
+
+    def bc(a: np.ndarray) -> np.ndarray:
+        """Materialize a possibly-broadcast vector at full batch size."""
+        return np.ascontiguousarray(np.broadcast_to(a, (M,)))
+
+    return PlacementCostBatch(
+        makespan_s=bc(makespan), net_s=bc(net_s), compute_s=bc(compute_s),
+        egress_gb=bc(egress_gb), egress_usd=bc(egress_usd),
+        instance_usd=bc(instance))
+
+
+def _eval_packed(placements, bw, packed, instance_usd_per_hour,
+                 backend: str) -> PlacementCostBatch:
+    """Dispatch one packed batch to the resolved backend."""
+    if backend == "jax":
+        from repro.kernels.placement_cost import eval_packed_jax
+        return PlacementCostBatch(*eval_packed_jax(
+            placements, bw, packed["inputs"], packed["speed"],
+            packed["price"], packed["out_ratio"], packed["comp_s"],
+            packed["waves"], instance_usd_per_hour))
+    return _eval_packed_numpy(
+        placements, bw, packed["inputs"], packed["speed"],
+        packed["price"], packed["out_ratio"], packed["comp_s"],
+        packed["waves"], instance_usd_per_hour)
+
+
+def _validate_batch(query: QuerySpec, placements: np.ndarray,
+                    bw: np.ndarray) -> None:
+    """The scalar path's shape/positivity/sum checks, batched."""
+    n = query.n
+    if bw.shape[-2:] != (n, n):
+        raise ValueError(f"bw shape {bw.shape} != (..., {n}, {n})")
+    if placements.ndim != 3 or \
+            placements.shape[1:] != (query.n_shuffles(), n):
+        raise ValueError(
+            f"placements shape {placements.shape} != "
+            f"(M, {query.n_shuffles()}, {n})")
+    if (placements < -1e-9).any() or \
+            not np.allclose(placements.sum(axis=2), 1.0, atol=1e-6):
+        raise ValueError("each stage's fractions must be >= 0, sum to 1")
+
+
+def estimate_cost_batch(query: QuerySpec, placements: np.ndarray,
+                        bw_mbps: np.ndarray, *,
+                        egress_usd_per_gb: Union[float, np.ndarray,
+                                                 None] = None,
+                        instance_usd_per_hour: float =
+                        INSTANCE_USD_PER_HOUR,
+                        backend: Optional[str] = None
+                        ) -> PlacementCostBatch:
+    """Price M candidate placements ([M, n_shuffles, N]) against one
+    per-pair `bw_mbps` [N,N] in a single vectorized pass.
+
+    The ``numpy`` backend is bit-identical to mapping
+    :func:`estimate_cost` over the batch (the scalar function stays the
+    readable reference; the search builds the winner's full
+    :class:`StageCost` breakdown from it lazily). ``jax`` runs the same
+    program jit-compiled (`repro.kernels.placement_cost`); ``scalar``
+    actually maps the reference, for tests and the benchmark baseline.
+    """
+    backend = placement_backend(backend)
+    placements = np.ascontiguousarray(np.asarray(placements, np.float64))
+    bw = np.asarray(bw_mbps, np.float64)
+    _validate_batch(query, placements, bw)
+    if len(placements) == 0:       # empty batch: empty vectors, any backend
+        empty = np.zeros(0)
+        return PlacementCostBatch(*([empty] * 6))
+    if backend == "scalar":
+        rows = [estimate_cost(query, p, bw,
+                              egress_usd_per_gb=egress_usd_per_gb,
+                              instance_usd_per_hour=instance_usd_per_hour)
+                for p in placements]
+        return PlacementCostBatch(
+            makespan_s=np.array([r.makespan_s for r in rows]),
+            net_s=np.array([r.net_s for r in rows]),
+            compute_s=np.array([r.compute_s for r in rows]),
+            egress_gb=np.array([r.egress_gb for r in rows]),
+            egress_usd=np.array([r.egress_usd for r in rows]),
+            instance_usd=np.array([r.instance_usd for r in rows]))
+    packed = pack_query(query, egress_usd_per_gb)
+    return _eval_packed(placements, bw, packed, instance_usd_per_hour,
+                        backend)

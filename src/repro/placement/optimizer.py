@@ -16,17 +16,34 @@ byte-replay):
     N <= 4 (tests pin the greedy search against it);
   * `initial_placement` — the Iridium-style leave-data-in-place
     baseline both start from.
+
+The hot path is BATCHED: every round's feasible moves are materialized
+as one ``[M, S, N]`` candidate tensor (base placement + sparse ±delta
+updates, no per-move copies) and priced in a single
+:func:`repro.placement.cost.estimate_cost_batch` launch; only the
+winner's full breakdown is built from the scalar reference. Searches
+are written as generators yielding candidate tensors, so
+:func:`search_many` can drive many jobs' searches in lock-step and fuse
+same-shape rounds into shared evaluator launches (the fleet tick path).
+Decisions are byte-identical to the historical one-`estimate_cost`-
+per-move search (`tests/test_placement_batch.py` pins the goldens).
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
-from typing import Iterator, List, Optional, Tuple, Union
+from dataclasses import dataclass, field
+from typing import (Any, Dict, Generator, Iterator, List, Optional, Tuple,
+                    Union)
 
 import numpy as np
 
-from repro.placement.cost import PlacementCost, estimate_cost
+from repro.placement.cost import (INSTANCE_USD_PER_HOUR, PlacementCost,
+                                  _eval_packed, estimate_cost,
+                                  estimate_cost_batch, pack_query,
+                                  placement_backend)
 from repro.placement.query import QuerySpec
+
+EXHAUSTIVE_CHUNK = 4096       # candidate rows per exhaustive-grid launch
 
 
 @dataclass(frozen=True)
@@ -43,6 +60,15 @@ class PlacementDecision:
         return np.asarray(self.placement, np.float64)
 
 
+def _better_vals(mk_a: float, eg_a: float, mk_b: float, eg_b: float,
+                 rel_tol: float = 0.01) -> bool:
+    """:func:`better` on raw (makespan, egress) values — what the
+    batched rounds compare without building cost objects."""
+    if mk_a < mk_b * (1.0 - rel_tol):
+        return True
+    return mk_a <= mk_b * (1.0 + rel_tol) and eg_a < eg_b * (1.0 - 1e-9)
+
+
 def better(a: PlacementCost, b: PlacementCost,
            rel_tol: float = 0.01) -> bool:
     """True when `a` beats `b` as a *candidate within one round*:
@@ -51,10 +77,8 @@ def better(a: PlacementCost, b: PlacementCost,
     break latency near-ties); *acceptance* of a move over the current
     placement always requires a strict makespan improvement, so the
     egress preference can never walk the latency uphill."""
-    if a.makespan_s < b.makespan_s * (1.0 - rel_tol):
-        return True
-    return (a.makespan_s <= b.makespan_s * (1.0 + rel_tol)
-            and a.egress_usd < b.egress_usd * (1.0 - 1e-9))
+    return _better_vals(a.makespan_s, a.egress_usd,
+                        b.makespan_s, b.egress_usd, rel_tol)
 
 
 def initial_placement(query: QuerySpec) -> np.ndarray:
@@ -68,126 +92,105 @@ def initial_placement(query: QuerySpec) -> np.ndarray:
 
 
 def _moves(placement: np.ndarray, delta: float
-           ) -> Iterator[Tuple[int, int, int]]:
-    """All (stage, src, dst) mass moves of `delta` currently feasible."""
+           ) -> Tuple[np.ndarray, List[Tuple[int, int, int]]]:
+    """Materialize every feasible (stage, src, dst, delta) mass move of
+    one round as a single candidate tensor.
+
+    Returns ``(cands [M,S,N], moves)`` where row m is the base
+    placement with ``delta`` moved from `moves[m] = (s, a, b)` —
+    built with one allocation plus two sparse scatters instead of M
+    per-move copies. Enumeration order (stage, src, dst) matches the
+    historical scalar search, so sequential tie-breaks are unchanged.
+    """
     S, n = placement.shape
+    moves: List[Tuple[int, int, int]] = []
     for s in range(S):
         for a in range(n):
             if placement[s, a] < delta - 1e-12:
                 continue
             for b in range(n):
                 if a != b:
-                    yield s, a, b
+                    moves.append((s, a, b))
+    M = len(moves)
+    cands = np.broadcast_to(placement, (M, S, n)).copy()
+    if M:
+        mv = np.asarray(moves, np.intp)
+        idx = np.arange(M)
+        cands[idx, mv[:, 0], mv[:, 1]] -= delta
+        cands[idx, mv[:, 0], mv[:, 2]] += delta
+    return cands, moves
 
 
-def _improve(query: QuerySpec, placement: np.ndarray,
-             bw: np.ndarray, delta: float, *,
-             egress_usd_per_gb, rel_tol: float,
-             max_rounds: int) -> Tuple[np.ndarray, PlacementCost, int]:
-    """Steepest-descent mass moves at one granularity: per round,
-    evaluate every feasible (stage, src, dst, delta) move; only moves
-    that strictly lower the makespan are acceptable, and among those
-    the `better` ordering picks the winner (egress breaks latency
-    near-ties). Ties fall to enumeration order — deterministic."""
-    best = estimate_cost(query, placement, bw,
-                         egress_usd_per_gb=egress_usd_per_gb)
-    evals = 1
-    for _ in range(max_rounds):
-        cand_cost: Optional[PlacementCost] = None
-        cand_move: Optional[Tuple[int, int, int]] = None
-        for s, a, b in _moves(placement, delta):
-            trial = placement.copy()
-            trial[s, a] -= delta
-            trial[s, b] += delta
-            c = estimate_cost(query, trial, bw,
-                              egress_usd_per_gb=egress_usd_per_gb)
-            evals += 1
-            if c.makespan_s >= best.makespan_s * (1.0 - 1e-9):
-                continue                     # acceptance is latency-strict
-            if cand_cost is None or better(c, cand_cost, rel_tol):
-                cand_cost, cand_move = c, (s, a, b)
-        if cand_move is None:
-            break
-        s, a, b = cand_move
-        placement[s, a] -= delta
-        placement[s, b] += delta
-        best = cand_cost
-    return placement, best, evals
+# A search generator yields candidate tensors [M,S,N] and receives the
+# batch's (makespan_s [M], egress_usd [M]) back; its return value is
+# (final placement, evals spent).
+SearchGen = Generator[np.ndarray, Tuple[np.ndarray, np.ndarray],
+                      Tuple[np.ndarray, int]]
 
 
-def _polish_egress(query: QuerySpec, placement: np.ndarray,
-                   bw: np.ndarray, delta: float, *,
-                   egress_usd_per_gb, best: PlacementCost,
-                   max_rounds: int) -> Tuple[np.ndarray, PlacementCost,
-                                             int]:
-    """Walk the makespan plateau toward cheaper egress: the bottleneck
-    `max` leaves non-critical mass free to consolidate, so moves that
-    strictly cut egress WITHOUT exceeding the converged makespan
-    (anchored — the bound never ratchets) are free money. Egress
-    strictly decreases each accepted move, so this terminates."""
-    anchor = best.makespan_s * (1.0 + 1e-9)
+def _greedy_gen(placement: np.ndarray, coarse: float, fine: float,
+                rel_tol: float, max_rounds: int) -> SearchGen:
+    """The greedy search as a batch-request generator: steepest-descent
+    rounds at coarse then fine granularity (latency-strict acceptance,
+    egress breaks near-ties via :func:`_better_vals`), then the
+    anchored egress-polish walk along the converged-makespan plateau.
+    One yield per round prices every feasible move at once."""
     evals = 0
-    for _ in range(max_rounds):
-        cand_cost: Optional[PlacementCost] = None
-        cand_move: Optional[Tuple[int, int, int]] = None
-        for s, a, b in _moves(placement, delta):
-            trial = placement.copy()
-            trial[s, a] -= delta
-            trial[s, b] += delta
-            c = estimate_cost(query, trial, bw,
-                              egress_usd_per_gb=egress_usd_per_gb)
-            evals += 1
-            if c.makespan_s > anchor or \
-                    c.egress_usd >= best.egress_usd * (1.0 - 1e-12):
-                continue
-            if cand_cost is None or \
-                    (c.egress_usd, c.makespan_s) < \
-                    (cand_cost.egress_usd, cand_cost.makespan_s):
-                cand_cost, cand_move = c, (s, a, b)
-        if cand_move is None:
-            break
-        s, a, b = cand_move
-        placement[s, a] -= delta
-        placement[s, b] += delta
-        best = cand_cost
-    return placement, best, evals
-
-
-def greedy_place(query: QuerySpec, bw_mbps: np.ndarray, *,
-                 egress_usd_per_gb: Union[float, np.ndarray, None] = None,
-                 coarse: float = 0.1, fine: float = 0.02,
-                 rel_tol: float = 0.01,
-                 max_rounds: int = 200) -> PlacementDecision:
-    """Greedy reducer placement + local-search refinement: start from
-    the data-proportional baseline, descend with `coarse` mass moves,
-    polish with `fine` ones, then consolidate free (plateau) mass
-    toward cheaper egress without giving back any converged makespan.
-    Deterministic; O(rounds * S * N^2) cost evaluations."""
-    bw = np.asarray(bw_mbps, np.float64)
-    placement = initial_placement(query)
-    cost: Optional[PlacementCost] = None
-    evals = 0
+    best_mk = best_eg = None
     for delta in (coarse, fine):
         if delta <= 0:
             continue
-        placement, cost, e = _improve(
-            query, placement, bw, delta,
-            egress_usd_per_gb=egress_usd_per_gb, rel_tol=rel_tol,
-            max_rounds=max_rounds)
-        evals += e
-    if cost is None:            # search disabled: price the baseline
-        cost = estimate_cost(query, placement, bw,
-                             egress_usd_per_gb=egress_usd_per_gb)
+        mks, egs = yield placement[None]        # price the current start
         evals += 1
+        best_mk, best_eg = float(mks[0]), float(egs[0])
+        for _ in range(max_rounds):
+            cands, moves = _moves(placement, delta)
+            if not moves:
+                break
+            mks, egs = yield cands
+            evals += len(moves)
+            # acceptance is latency-strict; `_better_vals` then picks
+            # the round winner in enumeration order (deterministic)
+            cand: Optional[int] = None
+            for i in np.nonzero(mks < best_mk * (1.0 - 1e-9))[0]:
+                if cand is None or _better_vals(mks[i], egs[i],
+                                                mks[cand], egs[cand],
+                                                rel_tol):
+                    cand = int(i)
+            if cand is None:
+                break
+            s, a, b = moves[cand]
+            placement[s, a] -= delta
+            placement[s, b] += delta
+            best_mk, best_eg = float(mks[cand]), float(egs[cand])
+    if best_mk is None:             # search disabled: price the baseline
+        mks, egs = yield placement[None]
+        evals += 1
+        best_mk, best_eg = float(mks[0]), float(egs[0])
     if fine > 0:
-        placement, cost, e = _polish_egress(
-            query, placement, bw, fine,
-            egress_usd_per_gb=egress_usd_per_gb, best=cost,
-            max_rounds=max_rounds)
-        evals += e
-    return PlacementDecision(
-        placement=tuple(tuple(float(v) for v in row) for row in placement),
-        cost=cost, evals=evals)
+        # walk the makespan plateau toward cheaper egress: the anchored
+        # bound never ratchets, and egress strictly decreases each
+        # accepted move, so this terminates
+        anchor = best_mk * (1.0 + 1e-9)
+        for _ in range(max_rounds):
+            cands, moves = _moves(placement, fine)
+            if not moves:
+                break
+            mks, egs = yield cands
+            evals += len(moves)
+            ok = (mks <= anchor) & (egs < best_eg * (1.0 - 1e-12))
+            cand = None
+            for i in np.nonzero(ok)[0]:
+                if cand is None or (egs[i], mks[i]) < (egs[cand],
+                                                       mks[cand]):
+                    cand = int(i)
+            if cand is None:
+                break
+            s, a, b = moves[cand]
+            placement[s, a] -= fine
+            placement[s, b] += fine
+            best_mk, best_eg = float(mks[cand]), float(egs[cand])
+    return placement, evals
 
 
 def _compositions(levels: int, n: int) -> Iterator[Tuple[int, ...]]:
@@ -200,33 +203,200 @@ def _compositions(levels: int, n: int) -> Iterator[Tuple[int, ...]]:
             yield (head,) + tail
 
 
+def _exhaustive_gen(query: QuerySpec, levels: int,
+                    chunk: int = EXHAUSTIVE_CHUNK) -> SearchGen:
+    """The composition-grid reference as a batch-request generator:
+    the grid is priced in chunked launches, and each chunk's winner is
+    the first index attaining the chunk-minimal (makespan, egress)
+    pair (stable lexsort == the historical sequential strict-< scan)."""
+    grid = np.asarray(list(_compositions(levels, query.n)),
+                      np.float64) / levels                   # [K, N]
+    S = query.n_shuffles()
+    evals = 0
+    best: Optional[Tuple[float, float]] = None
+    best_p: Optional[np.ndarray] = None
+    combos = itertools.product(range(len(grid)), repeat=S)
+    while True:
+        idx = np.asarray(list(itertools.islice(combos, chunk)), np.intp)
+        if not len(idx):
+            break
+        cands = grid[idx]                                    # [m, S, N]
+        mks, egs = yield cands
+        evals += len(idx)
+        # plain lexicographic (makespan, egress) — transitive, so the
+        # reference optimum is enumeration-order independent
+        w = int(np.lexsort((egs, mks))[0])
+        if best is None or (float(mks[w]), float(egs[w])) < best:
+            best = (float(mks[w]), float(egs[w]))
+            best_p = cands[w]
+    return best_p, evals
+
+
+# ----------------------------------------------------------------------
+# drivers — one search, or many in lock-step
+# ----------------------------------------------------------------------
+@dataclass
+class SearchTask:
+    """One placement search to drive: the query, the achievable-BW
+    matrix it prices against, and the search knobs. `gen` defaults to
+    the greedy search; :func:`search_many` batches rounds of many tasks
+    into shared evaluator launches."""
+
+    query: QuerySpec
+    bw: np.ndarray
+    egress_usd_per_gb: Any = None
+    coarse: float = 0.1
+    fine: float = 0.02
+    rel_tol: float = 0.01
+    max_rounds: int = 200
+    gen: Optional[SearchGen] = field(default=None, repr=False)
+
+    def start(self) -> SearchGen:
+        """Build (once) and return the underlying search generator."""
+        if self.gen is not None and self.gen.gi_frame is None:
+            raise ValueError(
+                "this SearchTask's search already ran to completion; "
+                "build a fresh SearchTask to search again")
+        if self.gen is None:
+            self.gen = _greedy_gen(initial_placement(self.query),
+                                   self.coarse, self.fine, self.rel_tol,
+                                   self.max_rounds)
+        return self.gen
+
+
+def _finish(task: SearchTask, placement: np.ndarray,
+            evals: int) -> PlacementDecision:
+    """Build the winner's full breakdown — the one scalar
+    :func:`estimate_cost` call of the whole search."""
+    cost = estimate_cost(task.query, placement, task.bw,
+                         egress_usd_per_gb=task.egress_usd_per_gb)
+    return PlacementDecision(
+        placement=tuple(tuple(float(v) for v in row) for row in placement),
+        cost=cost, evals=evals)
+
+
+def _drive_single(task: SearchTask,
+                  backend: Optional[str]) -> PlacementDecision:
+    """Run one search generator to completion against the backend."""
+    gen = task.start()
+    try:
+        req = next(gen)
+        while True:
+            batch = estimate_cost_batch(
+                task.query, req, task.bw,
+                egress_usd_per_gb=task.egress_usd_per_gb,
+                backend=backend)
+            req = gen.send((batch.makespan_s, batch.egress_usd))
+    except StopIteration as stop:
+        placement, evals = stop.value
+    return _finish(task, placement, evals)
+
+
+def search_many(tasks: List[SearchTask],
+                backend: Optional[str] = None) -> List[PlacementDecision]:
+    """Drive many searches in lock-step, fusing each round's candidate
+    tensors into shared evaluator launches.
+
+    Tasks whose pending requests share a (n_shuffles, N) shape are
+    concatenated along the candidate axis and priced in ONE packed
+    backend call (per-candidate bw/price/speed/stage rows — bit-exact
+    per row, so fusing never changes a decision); tasks with different
+    shapes fall into separate groups. This is the fleet-tick path: J
+    jobs' per-tick searches cost rounds-many launches total instead of
+    J independent Python searches (`fleet/controller.py`).
+    """
+    backend = placement_backend(backend)
+    gens = [t.start() for t in tasks]
+    pending: Dict[int, np.ndarray] = {}
+    results: Dict[int, PlacementDecision] = {}
+    for i, gen in enumerate(gens):
+        try:
+            pending[i] = next(gen)
+        except StopIteration as stop:
+            results[i] = _finish(tasks[i], *stop.value)
+    while pending:
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for i, req in pending.items():
+            groups.setdefault(req.shape[1:], []).append(i)
+        replies: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for members in groups.values():
+            if backend == "scalar" or len(members) == 1:
+                for i in members:
+                    b = estimate_cost_batch(
+                        tasks[i].query, pending[i], tasks[i].bw,
+                        egress_usd_per_gb=tasks[i].egress_usd_per_gb,
+                        backend=backend)
+                    replies[i] = (b.makespan_s, b.egress_usd)
+                continue
+            sizes = [len(pending[i]) for i in members]
+            cands = np.concatenate([pending[i] for i in members])
+            n = cands.shape[2]
+            bw3 = np.concatenate([
+                np.broadcast_to(tasks[i].bw[None], (m, n, n))
+                for i, m in zip(members, sizes)])
+            packs = [pack_query(tasks[i].query,
+                                tasks[i].egress_usd_per_gb)
+                     for i in members]
+            packed = {key: np.concatenate([
+                np.broadcast_to(p[key][None],
+                                (m,) + p[key].shape)
+                for p, m in zip(packs, sizes)])
+                for key in packs[0]}
+            batch = _eval_packed(cands, bw3, packed,
+                                 INSTANCE_USD_PER_HOUR, backend)
+            lo = 0
+            for i, m in zip(members, sizes):
+                replies[i] = (batch.makespan_s[lo:lo + m],
+                              batch.egress_usd[lo:lo + m])
+                lo += m
+        nxt: Dict[int, np.ndarray] = {}
+        for i, reply in replies.items():
+            try:
+                nxt[i] = gens[i].send(reply)
+            except StopIteration as stop:
+                results[i] = _finish(tasks[i], *stop.value)
+        pending = nxt
+    return [results[i] for i in range(len(tasks))]
+
+
+# ----------------------------------------------------------------------
+# public searches
+# ----------------------------------------------------------------------
+def greedy_place(query: QuerySpec, bw_mbps: np.ndarray, *,
+                 egress_usd_per_gb: Union[float, np.ndarray, None] = None,
+                 coarse: float = 0.1, fine: float = 0.02,
+                 rel_tol: float = 0.01,
+                 max_rounds: int = 200,
+                 backend: Optional[str] = None) -> PlacementDecision:
+    """Greedy reducer placement + local-search refinement: start from
+    the data-proportional baseline, descend with `coarse` mass moves,
+    polish with `fine` ones, then consolidate free (plateau) mass
+    toward cheaper egress without giving back any converged makespan.
+    Deterministic; O(rounds * S * N^2) cost evaluations, batched one
+    launch per round (`backend` as in :func:`estimate_cost_batch`)."""
+    task = SearchTask(query=query,
+                      bw=np.asarray(bw_mbps, np.float64),
+                      egress_usd_per_gb=egress_usd_per_gb,
+                      coarse=coarse, fine=fine, rel_tol=rel_tol,
+                      max_rounds=max_rounds)
+    return _drive_single(task, backend)
+
+
 def exhaustive_place(query: QuerySpec, bw_mbps: np.ndarray, *,
                      egress_usd_per_gb: Union[float, np.ndarray,
                                               None] = None,
-                     levels: int = 5) -> PlacementDecision:
+                     levels: int = 5,
+                     backend: Optional[str] = None) -> PlacementDecision:
     """Reference optimum on the fraction grid `{0, 1/levels, ...}` —
-    every per-stage composition, every stage combination. Exponential;
-    guarded to N <= 4 (its job is to pin `greedy_place` in tests)."""
+    every per-stage composition, every stage combination, priced in
+    chunked batches. Exponential; guarded to N <= 4 (its job is to pin
+    `greedy_place` in tests)."""
     if query.n > 4:
         raise ValueError(
             f"exhaustive reference is for N <= 4 DCs (got {query.n}); "
             f"use greedy_place for larger meshes")
-    bw = np.asarray(bw_mbps, np.float64)
-    grid: List[np.ndarray] = [np.asarray(c, np.float64) / levels
-                              for c in _compositions(levels, query.n)]
-    best: Optional[PlacementCost] = None
-    best_p: Optional[np.ndarray] = None
-    evals = 0
-    for combo in itertools.product(grid, repeat=query.n_shuffles()):
-        p = np.stack(combo)
-        c = estimate_cost(query, p, bw,
-                          egress_usd_per_gb=egress_usd_per_gb)
-        evals += 1
-        # plain lexicographic (makespan, egress) — transitive, so the
-        # reference optimum is enumeration-order independent
-        if best is None or (c.makespan_s, c.egress_usd) < \
-                (best.makespan_s, best.egress_usd):
-            best, best_p = c, p
-    return PlacementDecision(
-        placement=tuple(tuple(float(v) for v in row) for row in best_p),
-        cost=best, evals=evals)
+    task = SearchTask(query=query,
+                      bw=np.asarray(bw_mbps, np.float64),
+                      egress_usd_per_gb=egress_usd_per_gb,
+                      gen=_exhaustive_gen(query, levels))
+    return _drive_single(task, backend)

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.control import WanifyController
 from repro.placement.cost import PlacementCost, achievable_bw, estimate_cost
-from repro.placement.optimizer import greedy_place
+from repro.placement.optimizer import (PlacementDecision, SearchTask,
+                                       greedy_place)
 from repro.placement.query import QuerySpec
 from repro.wan.monitor import egress_price_vector
 from repro.wan.topology import KNEE_CONNS
@@ -104,6 +105,8 @@ class PlacementPlanner:
         self.records: List[PlacementRecord] = []
         self.placement: np.ndarray = np.zeros(0)
         self._detached = False
+        self._deferred = False
+        self._pending: Optional[Tuple[str, Optional[int]]] = None
         self._replace(reason="init", step=None)
         if backend == "wanify":
             controller.add_trace_hook(self._on_replan)
@@ -153,8 +156,14 @@ class PlacementPlanner:
     # (re-)placement
     # ------------------------------------------------------------------
     def _on_replan(self, rec) -> None:
-        """Controller trace hook: re-place under the fresh plan."""
+        """Controller trace hook: re-place under the fresh plan — or,
+        in deferred mode (a fleet tick), just record the trigger so the
+        fleet can fuse every job's search into shared launches."""
         if self._detached:
+            return
+        if self._deferred:
+            self._pending = (rec.get("reason", "replan"),
+                             rec.get("step"))
             return
         self._replace(reason=rec.get("reason", "replan"),
                       step=rec.get("step"))
@@ -163,12 +172,51 @@ class PlacementPlanner:
         decision = greedy_place(self.query, self.priced_bw(),
                                 egress_usd_per_gb=self.egress_usd_per_gb,
                                 **self._opt)
+        self._apply(decision, reason, step)
+
+    def _apply(self, decision: PlacementDecision, reason: str,
+               step: Optional[int]) -> None:
+        """Install a search result and append its trace record."""
         self.placement = decision.frac()
         self.records.append(PlacementRecord(
             step=step, reason=reason, backend=self.backend,
             makespan_est_s=decision.cost.makespan_s,
             egress_est_usd=decision.cost.egress_usd,
             placement=decision.placement))
+
+    # ------------------------------------------------------------------
+    # deferred (fleet-fused) re-placement
+    # ------------------------------------------------------------------
+    def defer_replans(self) -> None:
+        """Switch to deferred mode: replan triggers set a pending
+        marker instead of searching, and the owner (the fleet tick)
+        collects :meth:`pending_task` from every planner, drives them
+        through one `optimizer.search_many` lock-step pass, and
+        commits each result. Pricing is unchanged —
+        `priced_bw()` reads the job's own plan/envelope, which other
+        jobs' replans never touch — so a deferred search returns the
+        same decision an immediate one would."""
+        self._deferred = True
+
+    def pending_task(self) -> Optional[SearchTask]:
+        """The deferred search to run, as a `SearchTask` priced at the
+        current plan — or None when no replan fired since the last
+        commit (or the planner is detached)."""
+        if self._pending is None or self._detached:
+            return None
+        return SearchTask(query=self.query, bw=self.priced_bw(),
+                          egress_usd_per_gb=self.egress_usd_per_gb,
+                          **self._opt)
+
+    def commit(self, decision: PlacementDecision) -> None:
+        """Install the result of the pending deferred search."""
+        if self._pending is None:
+            raise ValueError(
+                "no deferred re-placement is pending (commit pairs "
+                "with a pending_task() taken after a replan trigger)")
+        reason, step = self._pending
+        self._pending = None
+        self._apply(decision, reason, step)
 
     # ------------------------------------------------------------------
     # evaluation

@@ -173,10 +173,23 @@ class WanSimulator:
 
     def rtt_weight(self) -> np.ndarray:
         """Per-connection contention weight ~ (1/RTT)^beta, normalized so
-        the closest link has weight 1."""
+        the closest link has weight 1.
+
+        Cached: the weight depends only on `dist` (fixed at
+        construction and only ever replaced wholesale, never mutated in
+        place) and `rtt_beta`, yet every water-fill used to rebuild it;
+        the cache is invalidated when either changes."""
+        cached = getattr(self, "_rtt_w_cache", None)
+        if cached is not None and cached[0] is self.dist \
+                and cached[1] == self.rtt_beta:
+            return cached[2]
         d = np.maximum(self.dist, 1.0)
         w = (d[~np.eye(self.N, dtype=bool)].min() / d) ** self.rtt_beta
         np.fill_diagonal(w, 0.0)
+        w.setflags(write=False)
+        # key on the dist OBJECT (kept alive by the cache itself, so a
+        # wholesale replacement can never alias its id) plus the beta
+        self._rtt_w_cache = (self.dist, self.rtt_beta, w)
         return w
 
     def _contending_conns(self, own: np.ndarray,
@@ -257,10 +270,18 @@ class WanSimulator:
         (diagonal ignored; every flow on a pair gets the same rate).
         """
         N = self.N
+        # every input of the fill is loop-invariant: the single-conn BW,
+        # NIC caps, RTT weights (cached across fills), and the clipped
+        # weight denominators are computed ONCE here, not per filling
+        # iteration
         single = self.link_bw_now()
         egress, ingress = self._caps()
         w = self.rtt_weight()                      # per-connection weight
         cw = c * w                                 # aggregate pair weight
+        w_pos = w > 0
+        cw_pos = cw > 0
+        w_den = np.maximum(w, 1e-12)
+        cw_den = np.maximum(cw, 1e-12)
         per_conn_cap = single                      # one stream's ceiling
         path_cap = single * self.knee              # parallelism knee
         if cap is not None:
@@ -281,11 +302,11 @@ class WanSimulator:
             inc_e = np.where(we > 0, head_e / np.maximum(we, 1e-12), np.inf)
             inc_i = np.where(wi > 0, head_i / np.maximum(wi, 1e-12), np.inf)
             # per-pair bounds in fill-level units (rate grows as t*w)
-            inc_conn = np.where(act & (w > 0),
-                                (per_conn_cap - rate) / np.maximum(w, 1e-12),
+            inc_conn = np.where(act & w_pos,
+                                (per_conn_cap - rate) / w_den,
                                 np.inf)
-            inc_path = np.where(act & (cw > 0),
-                                (path_cap - rate * c) / np.maximum(cw, 1e-12),
+            inc_path = np.where(act & cw_pos,
+                                (path_cap - rate * c) / cw_den,
                                 np.inf)
             inc_pair = np.minimum(inc_conn, inc_path)
             inc = min(float(np.min(inc_e)), float(np.min(inc_i)),
@@ -309,16 +330,50 @@ class WanSimulator:
     # Measurement modes
     # ------------------------------------------------------------------
     def measure_static_independent(self, conns_per_pair: int = 1) -> np.ndarray:
-        """One pair at a time (existing GDA systems' iPerf methodology)."""
+        """One pair at a time (existing GDA systems' iPerf methodology).
+
+        With the network otherwise idle, a solo pair's fill has a
+        closed form — the progressive filling freezes it in one step at
+        the tightest of its four constraints — so the historical
+        N(N-1)-waterfill loop collapses to one vectorized expression:
+
+            bw_ij = min(single_ij * c,            # per-connection cap
+                        single_ij * knee,         # parallelism knee
+                        egress_i, ingress_j)      # NIC caps
+
+        computed with the exact arithmetic of the filling loop (the
+        min of the loop's fill-level quotients times ``w * c``), so it
+        equals the loop BIT-FOR-BIT — `tests/test_simulator.py` pins
+        that on the 8-DC mesh. Cross-traffic or registered tenants
+        would contend even with a solo measurement pair, so that case
+        falls back to the per-pair fills.
+        """
         N = self.N
-        out = np.full((N, N), topo.INTRA_DC_BW)
-        for i in range(N):
-            for j in range(N):
-                if i == j:
-                    continue
-                c = np.zeros((N, N))
-                c[i, j] = conns_per_pair
-                out[i, j] = self.waterfill(c)[i, j]
+        bg = self.background_conns
+        if self.tenant_conns or (bg is not None and (np.asarray(bg) > 0).any()):
+            out = np.full((N, N), topo.INTRA_DC_BW)
+            for i in range(N):
+                for j in range(N):
+                    if i == j:
+                        continue
+                    c = np.zeros((N, N))
+                    c[i, j] = conns_per_pair
+                    out[i, j] = self.waterfill(c)[i, j]
+            return out
+        single = self.link_bw_now()
+        egress, ingress = self._caps()
+        w = self.rtt_weight()
+        c = float(conns_per_pair)
+        w_den = np.maximum(w, 1e-12)
+        cw_den = np.maximum(c * w, 1e-12)
+        # the loop's fill level: min over the four binding constraints,
+        # in fill-level units (rate grows as t * w)
+        inc = np.minimum(
+            np.minimum(single / w_den, (single * self.knee) / cw_den),
+            np.minimum(egress[:, None] / cw_den, ingress[None, :] / cw_den))
+        inc = np.where(np.isfinite(inc) & (inc >= 1e-9), inc, 0.0)
+        out = (inc * w) * c
+        np.fill_diagonal(out, topo.INTRA_DC_BW)
         return out
 
     def measure_simultaneous(self, conns: Optional[np.ndarray] = None,

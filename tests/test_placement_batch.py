@@ -1,0 +1,206 @@
+"""Batched placement-search engine tests: bit-exactness of
+`estimate_cost_batch` against the scalar reference, byte-identical
+search decisions vs the historical one-eval-per-move goldens and across
+numpy/jax backends, lock-step `search_many` fusion, and the jax launch
+bucketing."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.control import WanifyController
+from repro.core.predictor import SnapshotPredictor
+from repro.placement import (PLACEMENT_BACKENDS, SearchTask,
+                             achievable_bw, estimate_cost,
+                             estimate_cost_batch, exhaustive_place,
+                             get_workload, greedy_place,
+                             placement_backend, search_many,
+                             workload_names)
+from repro.placement.query import QuerySpec, Stage, skewed_partitions
+from repro.wan.monitor import egress_price_vector
+from repro.wan.simulator import WanSimulator
+
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "placement_golden.json")
+FIELDS = ("makespan_s", "net_s", "compute_s", "egress_gb", "egress_usd",
+          "instance_usd")
+
+
+def plan_bw(n, seed=0):
+    """Achievable BW + per-region egress prices at a quiet steady state."""
+    sim = WanSimulator(seed=seed, **QUIET)
+    ctl = WanifyController(sim, SnapshotPredictor(), n_pods=n)
+    return achievable_bw(ctl.plan), egress_price_vector(sim.regions[:n])
+
+
+# ----------------------------------------------------------------------
+# estimate_cost_batch == [estimate_cost(p) for p in batch], bit-for-bit
+# ----------------------------------------------------------------------
+def assert_batch_matches_scalar(query, placements, bw, price):
+    batch = estimate_cost_batch(query, placements, bw,
+                                egress_usd_per_gb=price)
+    for m, p in enumerate(placements):
+        ref = estimate_cost(query, p, bw, egress_usd_per_gb=price)
+        for f in FIELDS:
+            assert getattr(batch, f)[m] == getattr(ref, f), \
+                f"{f}[{m}] diverged from the scalar reference"
+
+
+def test_batch_matches_scalar_named_workloads():
+    rng = np.random.default_rng(0)
+    for name in workload_names():
+        for n in (3, 4, 8):
+            bw, price = plan_bw(n)
+            q = get_workload(name, n)
+            P = rng.dirichlet(np.ones(n), size=(32, q.n_shuffles()))
+            assert_batch_matches_scalar(q, P, bw, price)
+
+
+def test_batch_property_random_queries():
+    hypothesis = pytest.importorskip("hypothesis")     # noqa: F841
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(2, 12), st.integers(1, 3), st.floats(1.0, 8.0),
+           st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def run(n, n_shuffles, skew, waves, seed):
+        rng = np.random.default_rng(seed)
+        stages = [Stage("map", out_ratio=float(rng.uniform(0.2, 1.5)),
+                        compute_s_per_gb=float(rng.uniform(0.5, 3.0)))]
+        for k in range(n_shuffles):
+            stages.append(Stage(
+                f"s{k}", out_ratio=float(rng.uniform(0.05, 1.5)),
+                compute_s_per_gb=float(rng.uniform(0.5, 3.0)),
+                waves=waves if k == n_shuffles - 1 else 1))
+        q = QuerySpec("rand", input_gb=skewed_partitions(n, 80.0, skew),
+                      stages=tuple(stages),
+                      compute_speed=tuple(rng.uniform(0.25, 2.0, n)))
+        P = rng.dirichlet(np.ones(n), size=(int(rng.integers(1, 24)),
+                                            n_shuffles))
+        bw = rng.uniform(5.0, 3000.0, (n, n))
+        price = rng.uniform(0.01, 0.2, n)
+        assert_batch_matches_scalar(q, P, bw, price)
+
+    run()
+
+
+def test_batch_validation_and_backend_resolution():
+    q = get_workload("scan_agg", 4)
+    bw = np.full((4, 4), 300.0)
+    with pytest.raises(ValueError):
+        estimate_cost_batch(q, np.ones((2, 1, 3)) / 3, bw)
+    with pytest.raises(ValueError):     # fractions must sum to 1
+        estimate_cost_batch(q, np.full((2, 1, 4), 0.3), bw)
+    with pytest.raises(ValueError):
+        placement_backend("cuda")
+    assert placement_backend() in PLACEMENT_BACKENDS
+    old = os.environ.get("REPRO_PLACEMENT_BACKEND")
+    try:
+        os.environ["REPRO_PLACEMENT_BACKEND"] = "scalar"
+        assert placement_backend() == "scalar"
+    finally:
+        if old is None:
+            del os.environ["REPRO_PLACEMENT_BACKEND"]
+        else:
+            os.environ["REPRO_PLACEMENT_BACKEND"] = old
+
+
+def test_scalar_backend_is_the_reference():
+    q = get_workload("iterative", 4)
+    bw, price = plan_bw(4)
+    P = np.stack([np.full((1, 4), 0.25), np.array([[0.5, 0.5, 0.0, 0.0]])])
+    a = estimate_cost_batch(q, P, bw, egress_usd_per_gb=price,
+                            backend="numpy")
+    b = estimate_cost_batch(q, P, bw, egress_usd_per_gb=price,
+                            backend="scalar")
+    for f in FIELDS:
+        assert (getattr(a, f) == getattr(b, f)).all()
+
+
+# ----------------------------------------------------------------------
+# search decisions: pinned to the historical scalar search, and equal
+# across backends
+# ----------------------------------------------------------------------
+def decision_key(d):
+    return {"placement": [[repr(v) for v in row] for row in d.placement],
+            "makespan_s": repr(d.cost.makespan_s),
+            "egress_usd": repr(d.cost.egress_usd),
+            "evals": d.evals}
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_search_decisions_match_scalar_goldens(backend):
+    """The acceptance pin: greedy and exhaustive decisions (placement,
+    cost, even the eval count) are byte-identical to the pre-batching
+    one-`estimate_cost`-per-move search, recorded in
+    tests/data/placement_golden.json, on every named workload at
+    N in {3, 4, 8} — on both array backends."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    for name in workload_names():
+        for n in (3, 4, 8):
+            bw, price = plan_bw(n)
+            q = get_workload(name, n)
+            g = greedy_place(q, bw, egress_usd_per_gb=price,
+                             backend=backend)
+            assert decision_key(g) == golden[f"greedy/{name}/{n}"], \
+                (backend, name, n)
+            if n <= 4:
+                e = exhaustive_place(q, bw, egress_usd_per_gb=price,
+                                     levels=4, backend=backend)
+                assert decision_key(e) == \
+                    golden[f"exhaustive/{name}/{n}"], (backend, name, n)
+
+
+def test_search_disabled_and_coarse_only_still_match_scalar():
+    q = get_workload("scan_agg", 4)
+    bw, price = plan_bw(4)
+    for kw in (dict(coarse=0, fine=0), dict(coarse=0.1, fine=0),
+               dict(coarse=0, fine=0.05)):
+        a = greedy_place(q, bw, egress_usd_per_gb=price,
+                         backend="scalar", **kw)
+        b = greedy_place(q, bw, egress_usd_per_gb=price,
+                         backend="numpy", **kw)
+        assert a.placement == b.placement and a.evals == b.evals, kw
+
+
+# ----------------------------------------------------------------------
+# search_many: lock-step fusion never changes a decision
+# ----------------------------------------------------------------------
+def test_search_many_matches_independent_searches():
+    rng = np.random.default_rng(2)
+    tasks = []
+    for i, name in enumerate(("scan_agg", "scan_agg", "two_stage_join",
+                              "iterative")):
+        n = 4 if i < 3 else 3           # mixed shapes force 2 groups
+        tasks.append(SearchTask(query=get_workload(name, n),
+                                bw=rng.uniform(40.0, 900.0, (n, n)),
+                                egress_usd_per_gb=rng.uniform(0.02, 0.1,
+                                                              n)))
+    fused = search_many(tasks)
+    for t, d in zip(tasks, fused):
+        solo = greedy_place(t.query, t.bw,
+                            egress_usd_per_gb=t.egress_usd_per_gb)
+        assert d.placement == solo.placement
+        assert d.evals == solo.evals
+        assert d.cost == solo.cost
+
+
+def test_jax_launches_are_bucketed():
+    from repro.kernels import placement_cost as kpc
+    q = get_workload("scan_agg", 4)
+    bw, price = plan_bw(4)
+    rng = np.random.default_rng(3)
+    P = rng.dirichlet(np.ones(4), size=(40, 1))
+    estimate_cost_batch(q, P[:37], bw, egress_usd_per_gb=price,
+                        backend="jax")
+    before = kpc.compile_count()
+    # any batch size inside the same power-of-two bucket reuses the trace
+    for m in (33, 40, 64):
+        estimate_cost_batch(q, P[:m], bw, egress_usd_per_gb=price,
+                            backend="jax")
+    assert kpc.compile_count() == before
+    assert kpc.bucket(1) == 64 and kpc.bucket(64) == 64
+    assert kpc.bucket(65) == 128
