@@ -1,0 +1,173 @@
+"""Fused-tick benchmark — one jit program vs the sequential fleet loop.
+
+Measures the PR-6 tentpole end to end:
+
+  * `waterfill` rows — the progressive-fill rate solver alone: the
+    numpy reference loop (one Python iteration per freeze event) vs
+    the batched `repro.kernels.waterfill` while_loop kernel on the
+    same random contended matrices;
+  * `tick` rows — whole arbitration epochs at fleet scale: the
+    sequential `FleetController.tick` loop vs `FusedFleet.run` (the
+    same closed loop as ONE `lax.scan` launch) vs `FusedFleet.sweep`
+    (B scenario variants x T steps vmapped into one launch).
+
+`steps_per_s` counts arbitration epochs per wall-clock second; the
+sweep row counts every variant's epochs (B x T per launch). jit
+compile time is excluded (one warm run before timing) — the fused
+engine's pitch is steady-state scenario scanning, where one compile
+amortizes over whole grids.
+
+Run:  PYTHONPATH=src python benchmarks/tick_bench.py
+          [--out FILE] [--json [PATH]] [--smoke]
+
+`--json` writes the machine-readable BENCH_tick.json trajectory
+document; `--smoke` shrinks to CI sizes (the CI gate asserts fused >=
+2x sequential there; the committed full-size artifact shows the >= 5x
+fleet-scale headline at J=16).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import bench_parser, emit
+except ImportError:            # run as a script: sys.path[0] is benchmarks/
+    from common import bench_parser, emit
+from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
+                         default_fleet_forest)
+from repro.wan.simulator import WanSimulator
+
+# the fused determinism contract: no observation/host noise
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0,
+             host_sigma=0.0)
+PRIORITIES = (1.0, 2.0, 4.0)
+
+N_JOBS, STEPS, SWEEP_B = 16, 24, 16
+SMOKE_N_JOBS, SMOKE_STEPS, SMOKE_SWEEP_B = 6, 6, 4
+FILL_BATCH, SMOKE_FILL_BATCH = 64, 8
+
+
+def build_fleet(n_jobs: int, forest, seed: int = 0) -> FleetController:
+    """`n_jobs` 4-DC jobs whose slices tile-and-overlap the 8-DC mesh
+    (the fleet_bench pattern, under the fused noise contract)."""
+    sim = WanSimulator(seed=seed, **QUIET)
+    jobs = tuple(
+        JobSpec(name=f"job{j}",
+                dcs=tuple((j + k) % 8 for k in range(4)),
+                priority=PRIORITIES[j % len(PRIORITIES)])
+        for j in range(n_jobs))
+    return FleetController(sim, BatchedRfPredictor(forest), m_total=8,
+                           jobs=jobs)
+
+
+def bench_waterfill(batch: int, seed: int = 0) -> list:
+    """Rate-solver micro-bench: numpy loop vs one batched jax launch
+    over the same `batch` random contended aggregate matrices."""
+    from repro.kernels import waterfill as wfk
+    sim = WanSimulator(seed=seed, **QUIET)
+    rng = np.random.default_rng(seed)
+    n = sim.N
+    cs = rng.integers(0, 7, size=(batch, n, n)).astype(np.float64)
+    for c in cs:
+        np.fill_diagonal(c, 0.0)
+    single, egress, ingress, w, path_cap = sim.fill_inputs()
+
+    t0 = time.perf_counter()
+    for c in cs:
+        sim._fill_rates(c)
+    t_np = time.perf_counter() - t0
+
+    args = (cs, np.broadcast_to(single, cs.shape),
+            np.broadcast_to(egress, (batch, n)),
+            np.broadcast_to(ingress, (batch, n)), w,
+            np.broadcast_to(path_cap, cs.shape))
+    wfk.fill_rates(*args)                      # compile
+    t0 = time.perf_counter()
+    rate, iters, ok = wfk.fill_rates(*args)
+    t_jx = time.perf_counter() - t0
+    assert bool(np.all(ok))
+
+    rows = [{"kind": "waterfill", "backend": "numpy", "batch": batch,
+             "n_dcs": n, "fills_per_s": round(batch / t_np, 1)},
+            {"kind": "waterfill", "backend": "jax", "batch": batch,
+             "n_dcs": n, "fills_per_s": round(batch / t_jx, 1),
+             "speedup_vs_numpy": round(t_np / t_jx, 2)}]
+    for r in rows:
+        sys.stderr.write(f"[tick] waterfill/{r['backend']}: "
+                         f"{r['fills_per_s']} fills/s\n")
+    return rows
+
+
+def bench_ticks(n_jobs: int, steps: int, sweep_b: int,
+                seed: int = 0) -> list:
+    """Whole-epoch throughput: sequential loop vs fused scan vs
+    vmapped B-scenario sweep, identical fleet configuration."""
+    from repro.fleet.fused import make_schedule
+    forest = default_fleet_forest()
+
+    fleet = build_fleet(n_jobs, forest, seed=seed)
+    fleet.tick()                               # warm caches
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        fleet.tick()
+    t_seq = time.perf_counter() - t0
+    seq_sps = steps / t_seq
+
+    fleet = build_fleet(n_jobs, forest, seed=seed)
+    fleet.run_fused(steps)                     # compile the scan
+    t0 = time.perf_counter()
+    fleet.run_fused(steps)
+    t_fus = time.perf_counter() - t0
+    fus_sps = steps / t_fus
+
+    singles, bgs = [], []
+    for b in range(sweep_b):
+        sim = WanSimulator(seed=seed + b, **QUIET)
+        s, g = make_schedule(sim, steps)
+        singles.append(s)
+        bgs.append(g)
+    singles, bgs = np.stack(singles), np.stack(bgs)
+    ff = build_fleet(n_jobs, forest, seed=seed).fused()
+    ff.sweep(singles, bgs)                     # compile the vmapped scan
+    t0 = time.perf_counter()
+    ff.sweep(singles, bgs)
+    t_swp = time.perf_counter() - t0
+    swp_sps = sweep_b * steps / t_swp
+
+    rows = [
+        {"kind": "tick", "mode": "sequential", "n_jobs": n_jobs,
+         "steps": steps, "steps_per_s": round(seq_sps, 2)},
+        {"kind": "tick", "mode": "fused", "n_jobs": n_jobs,
+         "steps": steps, "steps_per_s": round(fus_sps, 2),
+         "speedup_vs_sequential": round(fus_sps / seq_sps, 2)},
+        {"kind": "tick", "mode": "fused_sweep", "n_jobs": n_jobs,
+         "steps": steps, "n_scenarios": sweep_b,
+         "steps_per_s": round(swp_sps, 2),
+         "speedup_vs_sequential": round(swp_sps / seq_sps, 2)},
+    ]
+    for r in rows:
+        sys.stderr.write(f"[tick] {r['mode']}: {r['steps_per_s']} "
+                         f"epochs/s\n")
+    return rows
+
+
+def main() -> None:
+    """CLI entry point; prints (or writes) one JSON document."""
+    ap = bench_parser(__doc__, "tick")
+    args = ap.parse_args()
+    if args.smoke:
+        n_jobs, steps, sweep_b = SMOKE_N_JOBS, SMOKE_STEPS, SMOKE_SWEEP_B
+        batch = SMOKE_FILL_BATCH
+    else:
+        n_jobs, steps, sweep_b = N_JOBS, STEPS, SWEEP_B
+        batch = FILL_BATCH
+    rows = bench_waterfill(batch, seed=args.seed)
+    rows += bench_ticks(n_jobs, steps, sweep_b, seed=args.seed)
+    emit("tick", rows, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -145,14 +145,15 @@ def global_optimize(pred_bw: np.ndarray, *, M: int = 8, D: float = 100.0,
 
     # Throttling (§3.2.2): cap BW-rich destinations at the row mean of
     # achievable BW so distant pairs can use the shared NIC capacity.
+    # Vectorized over rows; max_bw[off].reshape(N, N-1) keeps each
+    # row's off-diagonal entries contiguous in the historical order,
+    # so the row means are bit-identical to the per-row loop.
     throttle = np.full((N, N), np.inf)
     if throttle_enabled and N > 1:
         off = ~np.eye(N, dtype=bool)
-        for i in range(N):
-            T = max_bw[i][off[i]].mean()
-            rich = max_bw[i] > T
-            rich[i] = False
-            throttle[i][rich] = T
+        T = max_bw[off].reshape(N, N - 1).mean(axis=1)
+        rich = off & (max_bw > T[:, None])
+        throttle[rich] = np.broadcast_to(T[:, None], (N, N))[rich]
     if link_cap is not None:
         off = ~np.eye(N, dtype=bool)
         throttle[off] = np.minimum(throttle, np.asarray(link_cap,

@@ -10,6 +10,7 @@ water-fill. See DESIGN.md ("The fleet controller").
 """
 from repro.fleet.arbiter import arbitrate, connection_budgets, link_shares
 from repro.fleet.controller import FleetController, FleetJob, JobSpec
+from repro.fleet.fused import FusedFleet, make_schedule
 from repro.fleet.predictor import BatchedRfPredictor, default_fleet_forest
 from repro.fleet.scenario import (FLEET_SCENARIOS, FleetEngine,
                                   FleetScenarioSpec, fleet_scenario_names,
@@ -20,6 +21,7 @@ from repro.fleet.trace import (FleetResult, FleetStepTrace, FleetTrace,
 
 __all__ = [
     "FleetController", "FleetJob", "JobSpec",
+    "FusedFleet", "make_schedule",
     "TenantView",
     "BatchedRfPredictor", "default_fleet_forest",
     "arbitrate", "connection_budgets", "link_shares",

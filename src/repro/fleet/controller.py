@@ -265,6 +265,36 @@ class FleetController:
                 "kernel_calls": self.predictor.kernel_calls,
                 "jobs": rows}
 
+    def fused(self):
+        """Compile the CURRENT job set into a :class:`repro.fleet.fused.
+        FusedFleet` — the whole tick as one jit program, scanned over
+        steps / vmapped over scenario grids. Requires the fused
+        determinism contract (deterministic captures, fixed jobs with
+        equal slice sizes, no deferred planners); see fused.py.
+
+        Memoized on the job set / priorities / budget, so repeated
+        `run_fused` calls reuse the compiled scan instead of retracing
+        (live AIMD state is read fresh at each run)."""
+        from repro.fleet.fused import FusedFleet
+        key = (tuple((j.name, j.spec.dcs, j.priority, j.spec.skew_w)
+                     for j in self.jobs.values()),
+               self.m_total, id(self.predictor.forest),
+               tuple(n for n, _ in self._planners))
+        cached = getattr(self, "_fused_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        ff = FusedFleet(self)
+        self._fused_cache = (key, ff)
+        return ff
+
+    def run_fused(self, steps: int, events: Tuple = ()
+                  ) -> List[Dict[str, Any]]:
+        """Run `steps` arbitration epochs in ONE scanned jit launch and
+        sync the resulting AIMD state back into the live controllers
+        (sequential `tick()` calls can continue afterwards). Returns
+        per-tick records (the `tick()` row body minus plan signatures)."""
+        return self.fused().run(steps, events=events)
+
     def achieved(self) -> Dict[str, np.ndarray]:
         """Credited achieved BW per job at slice scale: ONE fleet-wide
         water-fill over every registered tenant, then each job's

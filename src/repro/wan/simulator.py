@@ -45,12 +45,18 @@ aggregate fill is exact, not an approximation.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.wan import topology as topo
+
+
+class WaterfillDivergence(RuntimeError):
+    """A progressive fill hit its iteration bound with unfrozen pairs
+    left — the rates would be partial, so the fill fails loudly."""
 
 
 @dataclass
@@ -81,6 +87,16 @@ class WanSimulator:
     # named tenants' [N,N] connection matrices: contend like cross-
     # traffic but their share IS credited (fleet arbitration)
     tenant_conns: Dict[str, np.ndarray] = field(default_factory=dict)
+    # host-metric noise scale (mem/cpu normal sd; 0 additionally skips
+    # the retransmission poisson, making host metrics DETERMINISTIC —
+    # the operating mode the fused fleet tick replicates in one jit
+    # program). Default keeps the historical draws byte-identical.
+    host_sigma: float = 0.02
+    # water-fill backend: None defers to $REPRO_WATERFILL_BACKEND
+    # (default "numpy", the bit-exact reference the trace goldens pin);
+    # "jax" dispatches `_fill_rates` to the batched
+    # `repro.kernels.waterfill` while_loop kernel (roundoff-equal)
+    waterfill_backend: Optional[str] = None
 
     def __post_init__(self):
         self.N = len(self.regions)
@@ -95,6 +111,15 @@ class WanSimulator:
         self._fluct = np.zeros((self.N, self.N))   # log-space AR(1) state
         self._link_factor = np.ones((self.N, self.N))  # scripted events
         self.modulation = 1.0                      # scripted diurnal cycle
+        # convergence accounting of the most recent / all fills (the
+        # historical loop capped silently at 8*N*N; now surfaced)
+        self.last_fill_iters = 0
+        self.fill_calls = 0
+
+    @property
+    def fill_iter_cap(self) -> int:
+        """The fill's iteration bound (divergence past this raises)."""
+        return 8 * self.N * self.N
 
     def _rebuild_base(self) -> None:
         self.base = topo.bw_single_matrix(self.regions)
@@ -264,36 +289,82 @@ class WanSimulator:
             out[name] = bw
         return out
 
+    def _fill_backend(self) -> str:
+        """Resolve the fill backend: the instance field wins, then
+        ``$REPRO_WATERFILL_BACKEND``, then the bit-exact numpy loop."""
+        b = self.waterfill_backend or \
+            os.environ.get("REPRO_WATERFILL_BACKEND", "numpy")
+        if b not in ("numpy", "jax"):
+            raise ValueError(f"unknown waterfill backend {b!r}; "
+                             f"expected 'numpy' or 'jax'")
+        return b
+
+    def fill_inputs(self, cap: Optional[np.ndarray] = None
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, np.ndarray]:
+        """The fill's loop-invariant inputs at the CURRENT network
+        state: ``(single, egress, ingress, w, path_cap)`` — the
+        single-connection BW, NIC caps, RTT weights (cached across
+        fills) and the knee path cap (min'd with any §3.2.2 `cap`).
+        Shared by the numpy loop, the jax kernel dispatch, and the
+        fused fleet tick's schedule precomputation."""
+        single = self.link_bw_now()
+        egress, ingress = self._caps()
+        w = self.rtt_weight()                      # per-connection weight
+        path_cap = single * self.knee              # parallelism knee
+        if cap is not None:
+            path_cap = np.minimum(path_cap, np.asarray(cap, np.float64))
+        return single, egress, ingress, w, path_cap
+
     def _fill_rates(self, c: np.ndarray,
                     cap: Optional[np.ndarray] = None) -> np.ndarray:
         """Per-connection rate [N,N] for an aggregate flow matrix `c`
         (diagonal ignored; every flow on a pair gets the same rate).
+
+        Converges within `fill_iter_cap` iterations or raises
+        :class:`WaterfillDivergence`; the actual iteration count is
+        surfaced on ``last_fill_iters`` (and ``fill_calls`` counts
+        fills) so harnesses can assert convergence headroom.
         """
         N = self.N
+        single, egress, ingress, w, path_cap = self.fill_inputs(cap)
+        if self._fill_backend() == "jax":
+            from repro.kernels import waterfill as wfk
+            rate, iters, ok = wfk.fill_rates(c, single, egress, ingress,
+                                             w, path_cap)
+            self.last_fill_iters = int(iters)
+            self.fill_calls += 1
+            if not bool(ok):
+                raise WaterfillDivergence(
+                    f"jax water-fill hit the {self.fill_iter_cap}-"
+                    f"iteration bound with unfrozen pairs left")
+            return rate
         # every input of the fill is loop-invariant: the single-conn BW,
         # NIC caps, RTT weights (cached across fills), and the clipped
         # weight denominators are computed ONCE here, not per filling
         # iteration
-        single = self.link_bw_now()
-        egress, ingress = self._caps()
-        w = self.rtt_weight()                      # per-connection weight
         cw = c * w                                 # aggregate pair weight
         w_pos = w > 0
         cw_pos = cw > 0
         w_den = np.maximum(w, 1e-12)
         cw_den = np.maximum(cw, 1e-12)
         per_conn_cap = single                      # one stream's ceiling
-        path_cap = single * self.knee              # parallelism knee
-        if cap is not None:
-            path_cap = np.minimum(path_cap, np.asarray(cap, np.float64))
         rate = np.zeros((N, N))                    # per-connection rate
         frozen = c <= 0
+        iters = 0
 
         # progressive filling on the weighted fill level t:
         # rate_ij = t * w_ij while unfrozen
-        for _ in range(8 * N * N):
+        while True:
             if frozen.all():
                 break
+            if iters >= self.fill_iter_cap:
+                self.last_fill_iters = iters
+                self.fill_calls += 1
+                raise WaterfillDivergence(
+                    f"water-fill hit the {self.fill_iter_cap}-iteration "
+                    f"bound with {int((~frozen).sum())} unfrozen pairs "
+                    f"left")
             act = ~frozen
             we = (cw * act).sum(axis=1)            # active weight per egress
             wi = (cw * act).sum(axis=0)
@@ -321,9 +392,12 @@ class WanSimulator:
             sat_e = egress - tot_e < 1e-6
             sat_i = ingress - tot_i < 1e-6
             hit |= act & (sat_e[:, None] | sat_i[None, :])
+            iters += 1
             if not hit.any() and inc == 0.0:
                 break
             frozen |= hit
+        self.last_fill_iters = iters
+        self.fill_calls += 1
         return rate
 
     # ------------------------------------------------------------------
@@ -418,15 +492,20 @@ class WanSimulator:
             bw = self.waterfill(c, tenant=tenant)
         total_in = c.sum(axis=0)
         total_out = c.sum(axis=1)
-        mem_util = np.clip(0.15 + 0.02 * total_in +
-                           self.rng_host.normal(0, 0.02, self.N), 0.05, 0.98)
-        cpu_load = np.clip(0.10 + 0.015 * total_out +
-                           self.rng_host.normal(0, 0.02, self.N), 0.02, 0.98)
+        # host_sigma == 0 skips every host draw (normal AND poisson):
+        # fully deterministic node metrics, the regime the fused fleet
+        # tick (repro.fleet.fused) reproduces inside one jit program
+        mem_eps = cpu_eps = 0.0
+        poisson = 0.0
+        if self.host_sigma > 0:
+            mem_eps = self.rng_host.normal(0, self.host_sigma, self.N)
+            cpu_eps = self.rng_host.normal(0, self.host_sigma, self.N)
+            poisson = self.rng_host.poisson(1.0, (self.N, self.N))
+        mem_util = np.clip(0.15 + 0.02 * total_in + mem_eps, 0.05, 0.98)
+        cpu_load = np.clip(0.10 + 0.015 * total_out + cpu_eps, 0.02, 0.98)
         # retransmissions rise when a pair is squeezed below its solo BW
         solo = self.link_bw_now()
         squeeze = np.maximum(0.0, 1.0 - bw / np.maximum(solo * c, 1e-9))
-        retrans = np.rint(squeeze * 40 +
-                          self.rng_host.poisson(1.0,
-                                                (self.N, self.N))).astype(float)
+        retrans = np.rint(squeeze * 40 + poisson).astype(float)
         np.fill_diagonal(retrans, 0)
         return mem_util, cpu_load, retrans

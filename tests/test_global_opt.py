@@ -148,3 +148,24 @@ def test_external_link_cap_joins_throttle_and_clamps_conns():
     assert plan.max_cons[0, 2] == base.max_cons[0, 2]
     np.testing.assert_array_equal(plan.min_cons <= plan.max_cons,
                                   np.ones((3, 3), bool))
+
+
+def test_throttle_vectorization_bit_identical_to_row_loop():
+    """The vectorized §3.2.2 throttle equals the historical per-row
+    Python loop BIT-FOR-BIT (np.float64 ==, not allclose): the row
+    means are taken over the same contiguous off-diagonal slices, so
+    summation order is unchanged."""
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        n = int(rng.integers(2, 12))
+        bw = rng.uniform(30.0, 2500.0, (n, n))
+        np.fill_diagonal(bw, 10000.0)
+        plan = global_optimize(bw, M=int(rng.integers(2, 12)))
+        ref = np.full((n, n), np.inf)
+        for i in range(n):                 # the pre-vectorization loop
+            row = np.delete(plan.max_bw[i], i)
+            T = row.mean()
+            for j in range(n):
+                if j != i and plan.max_bw[i, j] > T:
+                    ref[i, j] = T
+        np.testing.assert_array_equal(plan.throttle, ref)

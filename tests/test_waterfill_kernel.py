@@ -1,0 +1,217 @@
+"""The jax water-fill kernel vs the numpy reference loop, the
+convergence-accounting contract, backend dispatch, and the golden
+trace pins that prove the default path is byte-identical."""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.kernels import waterfill as wfk
+from repro.wan.simulator import WanSimulator, WaterfillDivergence
+
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
+R8 = WanSimulator().regions
+
+
+def random_sim(rng, n, seed):
+    """A fluctuated simulator over an n-DC mesh (n=16 doubles the 8-DC
+    testbed — duplicate regions give zero-distance pairs, the most
+    heterogeneous RTT weights the fill can see)."""
+    regions = (R8 * 2)[:n]
+    sim = WanSimulator(regions=regions, seed=seed)
+    sim.advance(int(rng.integers(0, 4)))
+    if rng.random() < 0.5:                       # uncredited cross-traffic
+        bg = rng.integers(0, 4, (n, n)).astype(float)
+        for i in range(n):
+            for j in range(n):
+                if bg[i, j]:
+                    sim.set_background(i, j, bg[i, j])
+    if rng.random() < 0.5:                       # rival registered tenants
+        for t in range(int(rng.integers(1, 3))):
+            tc = rng.integers(0, 3, (n, n)).astype(float)
+            sim.set_tenant_conns(f"rival{t}", tc)
+    return sim
+
+
+def random_case(rng, n, seed):
+    """(sim, aggregate conns, optional §3.2.2 cap) for one parity check."""
+    sim = random_sim(rng, n, seed)
+    c = rng.integers(0, 7, (n, n)).astype(float)
+    np.fill_diagonal(c, 0.0)
+    cap = None
+    if rng.random() < 0.4:
+        cap = rng.uniform(50.0, 2000.0, (n, n))
+    return sim, c, cap
+
+
+@pytest.mark.parametrize("n", [3, 8, 16])
+def test_jax_matches_numpy_randomized(n):
+    """The batched while_loop kernel reproduces `_fill_rates` to
+    roundoff — same rates AND the same iteration count — across
+    fluctuation states, cross-traffic, rival tenants, and throttle
+    caps."""
+    rng = np.random.default_rng(100 + n)
+    for trial in range(12):
+        sim, c, cap = random_case(rng, n, seed=1000 * n + trial)
+        ref = sim._fill_rates(c, cap)
+        ref_iters = sim.last_fill_iters
+        # the kernel consumes the same loop-invariant inputs the
+        # simulator computes once per fill
+        single, egress, ingress, w, path_cap = sim.fill_inputs(cap)
+        rate, iters, ok = wfk.fill_rates(c, single, egress, ingress, w,
+                                         path_cap)
+        assert bool(ok)
+        assert int(iters) == ref_iters
+        np.testing.assert_allclose(rate, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_jax_batched_fill_matches_per_matrix():
+    """One [B,N,N] launch equals B independent fills."""
+    rng = np.random.default_rng(7)
+    sim = WanSimulator(seed=7)
+    n = sim.N
+    cs = rng.integers(0, 6, (5, n, n)).astype(float)
+    for c in cs:
+        np.fill_diagonal(c, 0.0)
+    single, egress, ingress, w, path_cap = sim.fill_inputs()
+    rate_b, iters_b, ok_b = wfk.fill_rates(
+        cs, np.broadcast_to(single, cs.shape),
+        np.broadcast_to(egress, (5, n)), np.broadcast_to(ingress, (5, n)),
+        w, np.broadcast_to(path_cap, cs.shape))
+    assert ok_b.all()
+    for k, c in enumerate(cs):
+        ref = sim._fill_rates(c)
+        np.testing.assert_allclose(rate_b[k], ref, rtol=1e-9, atol=1e-9)
+        assert int(iters_b[k]) == sim.last_fill_iters
+
+
+def test_iteration_counter_surfaced():
+    """The historical silent 8*N*N cap is now an explicit budget: the
+    actual count is surfaced and sits far below the bound."""
+    sim = WanSimulator(seed=3)
+    assert sim.fill_calls == 0
+    conns = np.full((sim.N, sim.N), 4.0)
+    np.fill_diagonal(conns, 0.0)
+    sim.waterfill(conns)
+    assert sim.fill_calls == 1
+    assert 0 < sim.last_fill_iters < sim.fill_iter_cap
+    assert sim.fill_iter_cap == 8 * sim.N * sim.N
+    assert wfk.max_fill_iters(sim.N) == sim.fill_iter_cap
+
+
+def test_numpy_divergence_raises(monkeypatch):
+    """A fill that exhausts its iteration budget fails loudly instead
+    of returning partial rates."""
+    monkeypatch.setattr(WanSimulator, "fill_iter_cap",
+                        property(lambda self: 1))
+    sim = WanSimulator(seed=0, **QUIET)
+    conns = np.full((sim.N, sim.N), 4.0)
+    np.fill_diagonal(conns, 0.0)
+    with pytest.raises(WaterfillDivergence):
+        sim.waterfill(conns)
+
+
+def test_jax_divergence_raises(monkeypatch):
+    """The jax dispatch honors the kernel's converged flag."""
+    def fake_fill(c, *a):
+        return np.zeros_like(c), np.asarray(999), np.asarray(False)
+    monkeypatch.setattr(wfk, "fill_rates", fake_fill)
+    sim = WanSimulator(seed=0, waterfill_backend="jax", **QUIET)
+    conns = np.full((sim.N, sim.N), 2.0)
+    with pytest.raises(WaterfillDivergence):
+        sim.waterfill(conns)
+
+
+def test_backend_dispatch():
+    """Instance field wins, then $REPRO_WATERFILL_BACKEND, then numpy;
+    unknown names fail fast; the jax backend agrees with numpy."""
+    sim = WanSimulator(seed=5, **QUIET)
+    assert sim._fill_backend() == "numpy"
+    sim.waterfill_backend = "jax"
+    assert sim._fill_backend() == "jax"
+    sim.waterfill_backend = "tpu"
+    with pytest.raises(ValueError, match="tpu"):
+        sim._fill_backend()
+
+    conns = np.full((sim.N, sim.N), 3.0)
+    np.fill_diagonal(conns, 0.0)
+    a = WanSimulator(seed=5, **QUIET).waterfill(conns)
+    jx = WanSimulator(seed=5, waterfill_backend="jax", **QUIET)
+    b = jx.waterfill(conns)
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9)
+    assert jx.fill_calls == 1 and jx.last_fill_iters > 0
+
+
+def test_backend_env_var(monkeypatch):
+    """$REPRO_WATERFILL_BACKEND selects the kernel when the instance
+    leaves the backend unset."""
+    monkeypatch.setenv("REPRO_WATERFILL_BACKEND", "jax")
+    sim = WanSimulator(seed=5, **QUIET)
+    assert sim._fill_backend() == "jax"
+    monkeypatch.setenv("REPRO_WATERFILL_BACKEND", "quantum")
+    with pytest.raises(ValueError):
+        sim._fill_backend()
+
+
+# ----------------------------------------------------------------------
+# golden pins: the default numpy path is byte-identical pre-vs-post
+# ----------------------------------------------------------------------
+def _golden():
+    here = os.path.dirname(__file__)
+    with open(os.path.join(here, "data", "trace_golden.json")) as f:
+        return json.load(f)["hashes"]
+
+
+def _collector():
+    here = os.path.dirname(__file__)
+    path = os.path.join(here, os.pardir, "tools", "gen_trace_goldens.py")
+    spec = importlib.util.spec_from_file_location("gen_trace_goldens", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_trace_goldens_unchanged():
+    """Every named scenario / fleet / placement trace replays to the
+    sha256 pinned BEFORE the water-fill/optimizer refactor — the
+    byte-identity proof the fused-tick PR rides on."""
+    want = _golden()
+    got = _collector().collect()
+    assert got == want
+
+
+def test_trace_goldens_cover_all_suites():
+    """The pin set spans all three trace families (a regenerated file
+    that silently dropped a suite would weaken the contract)."""
+    keys = _golden().keys()
+    for prefix, minimum in (("scenario/", 8), ("fleet/", 4),
+                            ("placement/", 3)):
+        assert sum(k.startswith(prefix) for k in keys) >= minimum
+
+
+# ----------------------------------------------------------------------
+# hypothesis property (skipped when hypothesis is unavailable; the
+# seeded randomized parity above always runs)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([3, 8, 16]))
+    @settings(max_examples=20, deadline=None)
+    def test_property_jax_equals_numpy(seed, n):
+        """For any contended matrix (caps / background / tenants), the
+        jax kernel's rates match `_fill_rates` within tight tolerance."""
+        rng = np.random.default_rng(seed)
+        sim, c, cap = random_case(rng, n, seed=seed)
+        ref = sim._fill_rates(c, cap)
+        single, egress, ingress, w, path_cap = sim.fill_inputs(cap)
+        rate, iters, ok = wfk.fill_rates(c, single, egress, ingress, w,
+                                         path_cap)
+        assert bool(ok) and int(iters) < wfk.max_fill_iters(n)
+        np.testing.assert_allclose(rate, ref, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,68 @@
+"""Regenerate tests/data/trace_golden.json — sha256 pins of every named
+scenario / fleet / placement trace on the DEFAULT (numpy) backend.
+
+Run from the repo root:
+
+    PYTHONPATH=src python tools/gen_trace_goldens.py
+
+The pins freeze the canonical `to_json()` bytes of the traces the
+replay tests exercise, so a refactor of the water-fill / optimizer hot
+path (PR 6's fused tick) can prove the default path is byte-identical
+PRE-vs-POST, not merely self-consistent run-to-run. Only regenerate
+when a trace change is intentional and reviewed.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def collect() -> dict:
+    """Run every pinned trace and return {key: sha256-of-json}."""
+    from repro.fleet.scenario import fleet_scenario_names, \
+        get_fleet_scenario, run_fleet_scenario
+    from repro.placement import run_placement_scenario, scan_agg, \
+        two_stage_join
+    from repro.scenarios import get_scenario, run_scenario, scenario_names
+
+    out = {}
+    for name in scenario_names():
+        res = run_scenario(get_scenario(name), seed=3)
+        out[f"scenario/{name}/seed3"] = _sha(res.trace.to_json())
+    for name in fleet_scenario_names():
+        res = run_fleet_scenario(get_fleet_scenario(name), seed=3)
+        out[f"fleet/{name}/seed3"] = _sha(res.trace.to_json())
+    for backend in ("wanify", "static"):
+        res = run_placement_scenario("skew_ramp", query=two_stage_join(4),
+                                     seed=3, backend=backend)
+        out[f"placement/skew_ramp/{backend}/seed3"] = \
+            _sha(res.trace.to_json())
+    res = run_placement_scenario("runtime_fluctuation", query=scan_agg(4),
+                                 seed=5)
+    out["placement/runtime_fluctuation/wanify/seed5"] = \
+        _sha(res.trace.to_json())
+    return out
+
+
+def main() -> None:
+    """Write the golden document next to the test data."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "tests", "data", "trace_golden.json")
+    doc = {"comment": "sha256 of trace.to_json() per named run; "
+                      "regenerate via tools/gen_trace_goldens.py",
+           "hashes": collect()}
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    sys.stderr.write(f"wrote {os.path.abspath(path)} "
+                     f"({len(doc['hashes'])} pins)\n")
+
+
+if __name__ == "__main__":
+    main()
