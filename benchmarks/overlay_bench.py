@@ -1,0 +1,82 @@
+"""Overlay benchmark — direct-only vs relay-routed on the staged
+far-link cut (`cable_cut_reroute`), as one tracked artifact.
+
+Each row in `BENCH_overlay.json` is one (seed, mode) run of the
+scenario with a placement planner riding it:
+
+  * ``mode="direct"`` — the historical overlay-off path;
+  * ``mode="routed"`` — ``overlay=on``: the post-cut replans split the
+    cut pair's connections onto one-hop detours through the healthy
+    DCs (repro.overlay), charged on both hops in the ground-truth
+    water-fill.
+
+The tracked contract (smoke-guarded in CI): on the settled post-cut
+window the routed run's min achievable BW is >= the direct run's, and
+its total placement makespan is <= — relaying around a knee-capped cut
+must never lose to pumping connections into it.
+
+Run:  PYTHONPATH=src python benchmarks/overlay_bench.py
+          [--seed N] [--out FILE] [--json [PATH]] [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+try:
+    from benchmarks.common import bench_parser, emit
+except ImportError:            # run as a script: sys.path[0] is benchmarks/
+    from common import bench_parser, emit
+from repro.placement.scenario import run_placement_scenario
+from repro.scenarios import get_scenario
+
+SCENARIO = "cable_cut_reroute"
+# the cut lands at step 12; the first post-cut replan's routing is in
+# force from step 14 (see tests/test_overlay.py)
+SETTLED_STEP = 14
+SMOKE_STEPS = 18               # smoke still covers cut + settled window
+
+
+def bench_overlay(seed: int = 0, smoke: bool = False):
+    """Two rows per seed — the same scenario weather priced and
+    executed direct-only vs routed."""
+    rows = []
+    for mode, overlay in (("direct", "off"), ("routed", "on")):
+        spec = get_scenario(SCENARIO)
+        if smoke:
+            spec.steps = min(spec.steps, SMOKE_STEPS)
+        t0 = time.time()
+        res = run_placement_scenario(spec, seed=seed, overlay=overlay)
+        steps = res.trace.steps
+        post = [s for s in steps if s.step >= SETTLED_STEP]
+        rows.append({
+            "kind": "scenario",
+            "scenario": SCENARIO,
+            "mode": mode,
+            "seed": seed,
+            "steps": len(steps),
+            "makespan_total_s": round(sum(s.makespan_s for s in steps), 3),
+            "postcut_makespan_s": round(sum(s.makespan_s for s in post), 3),
+            "postcut_min_bw_mbps": round(min(s.achieved_min for s in post),
+                                         3),
+            "postcut_mean_min_bw_mbps":
+                round(sum(s.achieved_min for s in post) / max(len(post), 1),
+                      3),
+            "replacements": sum(1 for s in steps if s.replaced),
+            "wall_s": round(time.time() - t0, 3),
+        })
+        sys.stderr.write(
+            f"[overlay] {SCENARIO}/{mode}: post-cut min BW "
+            f"{rows[-1]['postcut_min_bw_mbps']} Mbps, makespan "
+            f"{rows[-1]['makespan_total_s']}s in {rows[-1]['wall_s']}s\n")
+    return rows
+
+
+def main() -> None:
+    """CLI entry point; prints (or writes) one JSON document."""
+    args = bench_parser(__doc__, "overlay").parse_args()
+    emit("overlay", bench_overlay(args.seed, smoke=args.smoke), args)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.global_opt import global_optimize
 from repro.core.local_opt import AimdAgent
 from repro.core.plan import WanPlan
+from repro.overlay.routing import RoutedPlan, overlay_mode, plan_routes
 from repro.wan.monitor import SnapshotMonitor
 from repro.wan.simulator import WanSimulator
 
@@ -80,11 +81,18 @@ class WanifyController:
                  events: Optional[List[str]] = None,
                  trace_hook: Optional[Callable[[Dict[str, Any]], None]]
                  = None,
-                 envelope: Optional[BudgetEnvelope] = None):
+                 envelope: Optional[BudgetEnvelope] = None,
+                 overlay: Optional[str] = None):
         self.sim = sim
         self.predictor = predictor
         self.n_pods = int(n_pods)
         self.cfg = cfg or ControllerConfig()
+        # Terra-style overlay routing gate: "on" runs the relay search
+        # on every replan and exposes the result on `routed` /
+        # `current_routing()`; "off" (default, or $REPRO_OVERLAY) runs
+        # no routed code path at all, keeping replays byte-identical
+        self.overlay = overlay_mode(overlay)
+        self.routed: Optional[RoutedPlan] = None
         self.monitor = SnapshotMonitor(sim)
         # a consumer may hand in its own log list; both append to it
         self.events: List[str] = events if events is not None else []
@@ -204,10 +212,34 @@ class WanifyController:
                "signature": plan.signature(), "n_pods": self.n_pods,
                "pred_min": float(pods[off].min()) if off.any() else 0.0,
                "pred_mean": float(pods[off].mean()) if off.any() else 0.0}
+        if self.overlay == "on":
+            # route selection rides every replan: split each pair's
+            # planned connections between the direct link and the best
+            # closeness-pruned one-hop relay on the predicted surface
+            self.routed = plan_routes(
+                gp.pred_bw, cons, dc_rel=gp.dc_rel,
+                capture_conns=self.last_capture_conns)
+            rec["overlay"] = "on"
+            rec["relays"] = self.routed.relays
+            rec["routed_signature"] = self.routed.signature()
         self.record.append(rec)
         if self.trace_hook is not None:
             self.trace_hook(rec)
         return plan
+
+    def current_routing(self) -> Optional[Tuple[np.ndarray, Tuple]]:
+        """The in-force overlay routing lowered to monitor scale, or
+        None when the overlay is off (or chose no relays): a
+        ``(direct, relays)`` pair for
+        :meth:`WanSimulator.waterfill_routed` — the [N,N] direct
+        connection matrix (relay shares already moved off the weak
+        pairs) plus the chosen ``(src, via, dst, conns)`` paths."""
+        if self.routed is None or not self.routed.relays:
+            return None
+        direct = self.current_conns()
+        P = self.n_pods
+        direct[:P, :P] = np.asarray(self.routed.direct, np.float64)
+        return direct, self.routed.relays
 
     # ------------------------------------------------------------------
     # Triggers

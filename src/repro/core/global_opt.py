@@ -14,7 +14,7 @@ Paper worked example (tested in tests/test_global_opt.py):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -92,6 +92,27 @@ def split_budget(M: int, weights: np.ndarray) -> np.ndarray:
             break
         share[rich] -= 1
     return share
+
+
+def relay_candidates(dc_rel: np.ndarray, i: int, j: int,
+                     max_candidates: int = 4) -> List[int]:
+    """Closeness-pruned one-hop relay candidates for the pair (i, j)
+    (the overlay router's bounded search, `repro.overlay.routing`).
+
+    A DC k qualifies when BOTH hops i->k and k->j sit in a closeness
+    class at least as near as the direct pair's (Algorithm 1 indices:
+    smaller = closer) — a relay whose hops are farther than the link it
+    bypasses can't beat it under the distance-monotone BW model, so it
+    is never scored. Candidates are ordered nearest classes first
+    (ties toward the lower DC index) and truncated to `max_candidates`.
+    """
+    rel = np.asarray(dc_rel)
+    P = rel.shape[0]
+    out = [k for k in range(P)
+           if k != i and k != j
+           and rel[i, k] <= rel[i, j] and rel[k, j] <= rel[i, j]]
+    out.sort(key=lambda k: (int(rel[i, k]) + int(rel[k, j]), k))
+    return out[:max_candidates]
 
 
 def global_optimize(pred_bw: np.ndarray, *, M: int = 8, D: float = 100.0,

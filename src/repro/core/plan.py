@@ -26,13 +26,25 @@ class WanPlan:
     pred_bw: Tuple[Tuple[float, ...], ...]  # [P,P] Mbps (predicted runtime)
     compress_bits: Tuple[int, ...]          # per ring-hop quantization bits
     # ring hop i sends pod i -> pod (i+1) % P
+    # the frozen (threshold, bits) policy the per-hop bits were picked
+    # with: `offset_bits()` must use the SAME policy, or a custom-
+    # policy plan's signature would mix per-hop bits from one policy
+    # with per-offset bits from the default
+    bits_policy: Tuple[Tuple[float, int], ...] = None  # type: ignore
+
+    def __post_init__(self):
+        if self.bits_policy is None:
+            object.__setattr__(self, "bits_policy",
+                               freeze_bits_policy(None))
 
     @classmethod
     def from_global(cls, plan: GlobalPlan, *, use_max: bool = True,
                     bits_policy: Optional[dict] = None) -> "WanPlan":
         """Freeze a GlobalPlan at one end of its range (max by
         default — the paper starts AIMD from maximum throughput) and
-        pick per-hop compression bits from predicted BW."""
+        pick per-hop compression bits from predicted BW. The policy is
+        stored on the plan so `offset_bits()` quantizes with the same
+        thresholds."""
         cons = plan.max_cons if use_max else plan.min_cons
         P = plan.n
         bits = []
@@ -44,6 +56,7 @@ class WanPlan:
             conns=tuple(tuple(int(v) for v in row) for row in cons),
             pred_bw=tuple(tuple(float(v) for v in row) for row in plan.pred_bw),
             compress_bits=tuple(bits),
+            bits_policy=freeze_bits_policy(bits_policy),
         )
 
     @classmethod
@@ -69,11 +82,17 @@ class WanPlan:
     def offset_bits(self) -> Tuple[int, ...]:
         """Wire bits per offset class (offset o exchanges pod
         i <-> (i+o) % P): quantization chosen from the weakest predicted
-        link in the class. The schedule lowering consumes this, so it
-        must be part of the compile-cache identity."""
+        link in the class, under the SAME frozen policy the per-hop
+        `compress_bits` were picked with (a custom `from_global(bits_
+        policy=...)` used to fall back to the default here, yielding a
+        signature whose two bit sets disagreed). The schedule lowering
+        consumes this, so it must be part of the compile-cache
+        identity."""
         P = self.n_pods
+        pol = dict(self.bits_policy)
         return tuple(
-            pick_bits(min(self.pred_bw[i][(i + o) % P] for i in range(P)))
+            pick_bits(min(self.pred_bw[i][(i + o) % P] for i in range(P)),
+                      pol)
             for o in range(1, P))
 
     def signature(self) -> Tuple:
@@ -85,10 +104,22 @@ class WanPlan:
                 self.offset_bits())
 
 
+DEFAULT_BITS_POLICY: dict = {200.0: 8, 600.0: 16, float("inf"): 32}
+
+
+def freeze_bits_policy(policy: Optional[dict]) -> Tuple[Tuple[float, int],
+                                                        ...]:
+    """A policy dict as the hashable sorted (threshold, bits) tuple a
+    frozen :class:`WanPlan` stores (None = the default policy)."""
+    pol = DEFAULT_BITS_POLICY if policy is None else policy
+    return tuple(sorted((float(t), int(b)) for t, b in pol.items()))
+
+
 def pick_bits(link_bw_mbps: float, policy: Optional[dict] = None) -> int:
     """BW-aware gradient-compression bits (SAGQ analogue): weaker link =>
-    fewer bits. Thresholds in Mbps."""
-    pol = policy or {200.0: 8, 600.0: 16, float("inf"): 32}
+    fewer bits. Thresholds in Mbps; a BW above every threshold (a
+    policy without the ``inf`` sentinel) falls back to full 32-bit."""
+    pol = policy or DEFAULT_BITS_POLICY
     for thr in sorted(pol):
         if link_bw_mbps <= thr:
             return pol[thr]

@@ -121,9 +121,14 @@ class FleetController:
         self.jobs[spec.name] = job
         envs = self._arbitrate()
         cfg = ControllerConfig(max_conns=self.m_total, advance_sim=False)
+        # overlay pinned off: the arbiter splits budgets and credits
+        # achieved BW over DIRECT per-pair flows; a job routing through
+        # a relay would consume a third DC's share the envelopes don't
+        # model (fleet-level overlay is future work), so a global
+        # $REPRO_OVERLAY=on must not leak into fleet jobs
         ctl = WanifyController(sim=view, predictor=SnapshotPredictor(),
                                n_pods=view.N, cfg=cfg,
-                               envelope=envs[spec.name])
+                               envelope=envs[spec.name], overlay="off")
         job.controller = ctl
         view.register(ctl.current_conns())
         self.events.append(f"job {spec.name} arrived "

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
@@ -37,7 +37,8 @@ def achievable_bw(plan: WanPlan,
                   link_cap: Optional[np.ndarray] = None,
                   capture_conns: Optional[np.ndarray] = None,
                   knee: Optional[float] = KNEE_CONNS,
-                  intra_dc_bw: float = INTRA_DC_BW) -> np.ndarray:
+                  intra_dc_bw: float = INTRA_DC_BW,
+                  routing: Optional[Any] = None) -> np.ndarray:
     """Per-pair achievable BW [P,P] in Mbps a placement prices against:
     predicted BW x connection count — the paper's "runtime BW grows
     linearly with the connections" — scaled from the operating point
@@ -53,9 +54,25 @@ def achievable_bw(plan: WanPlan,
     connection count on both sides of the ratio (parallelism gains
     saturate ~8-9 streams; `None` = pure linearity). An arbitrated
     fleet envelope's `link_cap` clamps the result. Diagonal = intra-DC
-    BW."""
+    BW.
+
+    `routing` (a `repro.overlay.RoutedPlan`, from
+    `WanifyController.routed`) prices the ROUTED surface instead: the
+    direct term uses the routing's residual direct connections, and
+    each relay (i, k, j, conns) adds its store-and-forward credit —
+    the knee-capped connection count times the weaker hop's per-
+    connection predicted BW — onto the end-to-end pair (i, j). With
+    `routing=None` (the default, overlay off) the arithmetic is
+    unchanged."""
     pred = np.asarray(plan.pred_bw, np.float64)
-    conns = np.asarray(plan.conns, np.float64)
+    if routing is None:
+        conns = np.asarray(plan.conns, np.float64)
+    else:
+        if routing.n_pods != plan.n_pods:
+            raise ValueError(
+                f"routing spans {routing.n_pods} pods != plan scale "
+                f"{plan.n_pods}")
+        conns = np.asarray(routing.direct, np.float64)
     if capture_conns is None:
         base = np.ones_like(conns)
     else:
@@ -68,6 +85,14 @@ def achievable_bw(plan: WanPlan,
         conns = np.minimum(conns, knee)
         base = np.minimum(base, knee)
     bw = pred * conns / base
+    if routing is not None:
+        # per-connection prediction on each hop, at the hop's own
+        # capture operating point; a relay connection sustains the
+        # weaker hop's per-connection rate (store-and-forward)
+        unit = pred / base
+        for i, k, j, cr in routing.relays:
+            eff = min(float(cr), knee) if knee is not None else float(cr)
+            bw[i, j] += eff * min(float(unit[i, k]), float(unit[k, j]))
     if link_cap is not None:
         cap = np.asarray(link_cap, np.float64)
         if cap.shape != bw.shape:

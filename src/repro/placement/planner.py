@@ -140,8 +140,12 @@ class PlacementPlanner:
         if knee is None:                 # a fleet TenantView: the mesh's
             knee = getattr(getattr(ctl.sim, "shared", None), "knee",
                            KNEE_CONNS)
+        # with the overlay on, price the ROUTED surface: a cut link's
+        # pair carries its relay credit, so the search stops fleeing
+        # DCs the overlay can still reach
         return achievable_bw(ctl.plan, link_cap=cap,
-                             capture_conns=capture, knee=knee)
+                             capture_conns=capture, knee=knee,
+                             routing=ctl.routed)
 
     def exec_conns(self) -> np.ndarray:
         """The [P,P] connection matrix the workload's shuffles would

@@ -102,14 +102,18 @@ def _round_placement(p: np.ndarray) -> Tuple[Tuple[float, ...], ...]:
 def run_placement_scenario(spec: Union[str, ScenarioSpec],
                            query: Optional[QuerySpec] = None,
                            seed: int = 0, backend: str = "wanify",
-                           predictor: Any = None
+                           predictor: Any = None,
+                           overlay: Optional[str] = None
                            ) -> PlacementScenarioResult:
     """Drive one scenario with a placement planner riding the loop.
 
     `spec` is a named scenario or a full :class:`ScenarioSpec`
     (timelines containing `Rescale` are rejected — a placed query's DC
     span is fixed); `query` defaults to the `scan_agg` workload over
-    the spec's pod count.
+    the spec's pod count. `overlay` gates Terra-style relay routing
+    (None defers to $REPRO_OVERLAY): when on, the ``wanify`` backend
+    prices AND executes against the routed surface — relayed pairs
+    carry their store-and-forward credit in the ground-truth fill.
     """
     if isinstance(spec, str):
         spec = get_scenario(spec)
@@ -120,7 +124,8 @@ def run_placement_scenario(spec: Union[str, ScenarioSpec],
             f"timeline for placement runs")
     if query is None:
         query = scan_agg(spec.n_pods)
-    eng = ScenarioEngine(spec, seed=seed, predictor=predictor)
+    eng = ScenarioEngine(spec, seed=seed, predictor=predictor,
+                         overlay=overlay)
     planner = PlacementPlanner(eng.controller, query, backend=backend)
     trace = PlacementTrace(scenario=spec.name, query=query.name,
                            backend=backend, seed=seed)
@@ -128,11 +133,16 @@ def run_placement_scenario(spec: Union[str, ScenarioSpec],
 
     def hook(engine: ScenarioEngine, row) -> None:
         P = engine.controller.n_pods
+        routing = None
         if backend == "wanify":
             conns = engine.controller.current_conns()
+            routing = engine.controller.current_routing()
         else:
             conns = np.ones((engine.sim.N, engine.sim.N))
-        true_bw = engine.sim.waterfill(conns)[:P, :P]
+        if routing is None:
+            true_bw = engine.sim.waterfill(conns)[:P, :P]
+        else:
+            true_bw = engine.sim.waterfill_routed(*routing)[:P, :P]
         cost = planner.evaluate(true_bw)
         off = ~np.eye(P, dtype=bool)
         trace.steps.append(PlacementStepTrace(

@@ -57,7 +57,7 @@ class ScenarioEngine:
     """One deterministic run of a :class:`ScenarioSpec`."""
 
     def __init__(self, spec: ScenarioSpec, seed: int = 0,
-                 predictor: Any = None):
+                 predictor: Any = None, overlay: Optional[str] = None):
         self.spec = spec
         self.seed = int(seed)
         sim_kw = dict(spec.sim_kwargs)
@@ -67,9 +67,13 @@ class ScenarioEngine:
         cfg_kw = dict(spec.cfg_kwargs)
         cfg_kw.pop("advance_sim", None)    # the engine owns simulated time
         cfg = ControllerConfig(advance_sim=False, **cfg_kw)
+        # `overlay` gates Terra-style relay routing (None defers to
+        # $REPRO_OVERLAY, default off): when on, the workload executes
+        # at the controller's routed lowering — relay flows charged on
+        # both hops, credited at the store-and-forward bottleneck
         self.controller = WanifyController(
             sim=self.sim, predictor=predictor or SnapshotPredictor(),
-            n_pods=spec.n_pods, cfg=cfg)
+            n_pods=spec.n_pods, cfg=cfg, overlay=overlay)
         self.step = 0
         # a per-step tap for ride-along harnesses (repro.placement):
         # called as step_hook(engine, step_trace_row) after each step's
@@ -170,7 +174,14 @@ class ScenarioEngine:
             sim.advance()
 
             conns = self._full_conns()
-            achieved = sim.waterfill(conns)
+            routing = ctl.current_routing()
+            if routing is None:
+                achieved = sim.waterfill(conns)
+            else:
+                # overlay in force: execute the routed lowering — the
+                # end-to-end credit on a relayed pair is what the ring
+                # consumer observes
+                achieved = sim.waterfill_routed(*routing)
             dt = self._step_time(achieved)
             ctl.observe_step_time(dt, step=k)
             ctl.maybe_replan(k, skew_w=self.skew_for_pods())
@@ -213,6 +224,9 @@ class ScenarioEngine:
 
 
 def run_scenario(spec: ScenarioSpec, seed: int = 0,
-                 predictor: Any = None) -> ScenarioResult:
-    """Build a fresh engine and run the scenario to completion."""
-    return ScenarioEngine(spec, seed=seed, predictor=predictor).run()
+                 predictor: Any = None,
+                 overlay: Optional[str] = None) -> ScenarioResult:
+    """Build a fresh engine and run the scenario to completion
+    (`overlay` gates relay routing; None defers to $REPRO_OVERLAY)."""
+    return ScenarioEngine(spec, seed=seed, predictor=predictor,
+                          overlay=overlay).run()

@@ -93,6 +93,28 @@ def cable_cut() -> ScenarioSpec:
         cfg_kwargs=dict(replan_every=5))
 
 
+def cable_cut_reroute() -> ScenarioSpec:
+    """A silent cut on a FAR ring hop, staged for overlay routing
+    (repro.overlay): us-west<->ap-south collapses 50x, so its direct
+    path is pinned at the knee cap (8.5x a tiny degraded single-conn
+    BW) no matter how many connections AIMD pumps — while one-hop
+    detours (us-west -> us-east -> ap-south, or via ap-se) keep the
+    healthy far-class capacity. With ``REPRO_OVERLAY=on`` (or
+    ``run_scenario(..., overlay="on")``) the first post-cut replan
+    routes around the cut and the pair's achieved BW recovers to the
+    relay bottleneck — strictly better than direct-only, pinned in
+    `tests/test_overlay.py` and tracked in BENCH_overlay.json. With
+    the overlay off (the default) this replays the direct-only
+    controller against the same weather."""
+    return ScenarioSpec(
+        name="cable_cut_reroute", steps=40,
+        description="us-west<->ap-south silently collapses 50x at step "
+                    "12; overlay=on relays around it via us-east/ap-se",
+        events=(at(12, LinkDegrade(("us-west", "ap-south"), factor=0.02)),),
+        sim_kwargs=dict(QUIET),
+        cfg_kwargs=dict(replan_every=5))
+
+
 def straggler_host() -> ScenarioSpec:
     """An injected slow host (§3.2.2): the straggler trigger forces an
     AIMD multiplicative decrease plus an immediate replan."""
@@ -145,6 +167,7 @@ SCENARIOS: Dict[str, Callable[[], ScenarioSpec]] = {
     "congestion": congestion,
     "link_flap": link_flap,
     "cable_cut": cable_cut,
+    "cable_cut_reroute": cable_cut_reroute,
     "straggler_host": straggler_host,
     "elastic": elastic,
     "provider_shift": provider_shift,

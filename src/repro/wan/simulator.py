@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -257,6 +257,45 @@ class WanSimulator:
         np.fill_diagonal(bw, topo.INTRA_DC_BW)
         return bw
 
+    def waterfill_routed(self, direct: np.ndarray,
+                         relays: Sequence[Tuple[int, int, int, float]],
+                         cap: Optional[np.ndarray] = None,
+                         tenant: Optional[str] = None) -> np.ndarray:
+        """Achieved END-TO-END BW per pair [N,N] for a routed workload
+        (repro.overlay): `direct` is the [N,N] direct-path connection
+        matrix; each relay ``(i, k, j, conns)`` sends `conns` extra
+        connections over the one-hop path i -> k -> j.
+
+        Relay flows are charged on BOTH hops: the fill solves one
+        expanded connection matrix in which a relay's connections
+        appear on (i, k) AND (k, j), contending with every direct flow
+        there (and with background / rival tenants, exactly like
+        :meth:`waterfill`). Crediting is store-and-forward: each relay
+        connection sustains ``min(rate[i,k], rate[k,j])`` — the
+        bottleneck hop's per-connection rate — so a relay through a
+        DC whose NIC is saturated buys nothing. The faster hop's
+        surplus is NOT redistributed (conservative; the surplus decays
+        as AIMD rebalances), and the credit lands on the end-to-end
+        pair (i, j), which is what a shuffle/ring consumer observes.
+        """
+        own = np.asarray(direct, np.float64).copy()
+        np.fill_diagonal(own, 0.0)
+        expanded = own.copy()
+        for i, k, j, cr in relays:
+            if i == j or cr <= 0:
+                continue
+            expanded[i, k] += cr
+            expanded[k, j] += cr
+        c = self._contending_conns(expanded, tenant)
+        rate = self._fill_rates(c, cap)
+        bw = rate * own
+        for i, k, j, cr in relays:
+            if i == j or cr <= 0:
+                continue
+            bw[i, j] += cr * min(float(rate[i, k]), float(rate[k, j]))
+        np.fill_diagonal(bw, topo.INTRA_DC_BW)
+        return bw
+
     def waterfill_tenants(self, conns_by_tenant: Dict[str, np.ndarray],
                           cap: Optional[np.ndarray] = None
                           ) -> Dict[str, np.ndarray]:
@@ -266,6 +305,17 @@ class WanSimulator:
         Exact because flows on the same pair share the pair's rate —
         and a single solve instead of one per job is what keeps the
         fleet tick sublinear in job count.
+
+        The PASSED matrices are authoritative: a tenant mid-replan may
+        price a candidate matrix that differs from its
+        :meth:`set_tenant_conns` registration, and both the contention
+        aggregate and the crediting use the candidate. (The historical
+        add-every-registration-then-subtract form only netted out to
+        this for exactly-representable counts; with fractional conns
+        the float round-trip left contention and crediting disagreeing
+        by roundoff — now the registration of a passed tenant never
+        enters the aggregate at all.) Registered tenants NOT passed
+        here still contend as uncredited rivals.
         """
         stack = {}
         for name, conns in conns_by_tenant.items():
@@ -275,12 +325,13 @@ class WanSimulator:
         total = np.zeros((self.N, self.N))
         for c in stack.values():
             total += c
-        total = self._contending_conns(total, tenant=None)
-        # registered tenants already appear in `stack`; exclude their
-        # registration from the aggregate to avoid double-counting
+        if self.background_conns is not None:
+            bg = np.asarray(self.background_conns, np.float64).copy()
+            np.fill_diagonal(bg, 0.0)
+            total += np.maximum(bg, 0.0)           # cross-traffic contends
         for name, tc in self.tenant_conns.items():
-            if name in stack:
-                total -= tc
+            if name not in stack:
+                total += tc                        # rival tenants contend
         rate = self._fill_rates(total, cap)
         out = {}
         for name, c in stack.items():
@@ -403,7 +454,9 @@ class WanSimulator:
     # ------------------------------------------------------------------
     # Measurement modes
     # ------------------------------------------------------------------
-    def measure_static_independent(self, conns_per_pair: int = 1) -> np.ndarray:
+    def measure_static_independent(self, conns_per_pair: int = 1,
+                                   tenant: Optional[str] = None
+                                   ) -> np.ndarray:
         """One pair at a time (existing GDA systems' iPerf methodology).
 
         With the network otherwise idle, a solo pair's fill has a
@@ -418,13 +471,20 @@ class WanSimulator:
         computed with the exact arithmetic of the filling loop (the
         min of the loop's fill-level quotients times ``w * c``), so it
         equals the loop BIT-FOR-BIT — `tests/test_simulator.py` pins
-        that on the 8-DC mesh. Cross-traffic or registered tenants
-        would contend even with a solo measurement pair, so that case
-        falls back to the per-pair fills.
+        that on the 8-DC mesh. Cross-traffic or RIVAL registered
+        tenants would contend even with a solo measurement pair, so
+        those cases fall back to the per-pair fills.
+
+        `tenant` names the caller like in every other measure_* mode:
+        its own :meth:`set_tenant_conns` registration is excluded, so
+        a registered tenant measuring static-independent sees the solo
+        closed form (or self-excluded fills) instead of double-
+        counting its in-force flows as rival traffic.
         """
         N = self.N
         bg = self.background_conns
-        if self.tenant_conns or (bg is not None and (np.asarray(bg) > 0).any()):
+        rivals = any(name != tenant for name in self.tenant_conns)
+        if rivals or (bg is not None and (np.asarray(bg) > 0).any()):
             out = np.full((N, N), topo.INTRA_DC_BW)
             for i in range(N):
                 for j in range(N):
@@ -432,7 +492,7 @@ class WanSimulator:
                         continue
                     c = np.zeros((N, N))
                     c[i, j] = conns_per_pair
-                    out[i, j] = self.waterfill(c)[i, j]
+                    out[i, j] = self.waterfill(c, tenant=tenant)[i, j]
             return out
         single = self.link_bw_now()
         egress, ingress = self._caps()

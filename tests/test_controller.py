@@ -242,3 +242,40 @@ def test_pick_bits_reexported():
     assert pick_bits(100.0) == 8
     assert pick_bits(400.0) == 16
     assert pick_bits(5000.0) == 32
+
+
+def test_pick_bits_policy_without_inf_sentinel():
+    """A policy with no ``inf`` threshold falls back to full 32-bit
+    for BW above every threshold instead of raising or mis-binning."""
+    pol = {200.0: 8}
+    assert pick_bits(100.0, pol) == 8
+    assert pick_bits(200.0, pol) == 8       # inclusive threshold
+    assert pick_bits(5000.0, pol) == 32
+
+
+def test_offset_bits_follows_custom_policy():
+    """`from_global(bits_policy=...)` used to pick per-hop bits with
+    the custom policy but per-OFFSET bits with the default — two bit
+    sets from two policies inside one signature. The policy is frozen
+    on the plan and both pickers now use it."""
+    from repro.core.global_opt import global_optimize
+    from repro.core.plan import freeze_bits_policy
+    pred = np.full((4, 4), 400.0)
+    np.fill_diagonal(pred, 10000.0)
+    gp = global_optimize(pred, M=8)
+    custom = {500.0: 8, float("inf"): 16}
+    plan = WanPlan.from_global(gp, bits_policy=custom)
+    default = WanPlan.from_global(gp)
+    assert plan.compress_bits == (8, 8, 8, 8)      # 400 <= 500 -> 8
+    assert default.compress_bits == (16, 16, 16, 16)
+    assert plan.offset_bits() == (8, 8, 8)         # SAME policy now
+    assert default.offset_bits() == (16, 16, 16)
+    assert plan.bits_policy == freeze_bits_policy(custom)
+    assert default.bits_policy == freeze_bits_policy(None)
+    assert plan.signature() != default.signature()
+    # a hand-built plan (no policy argument) defaults identically, so
+    # historical signatures are unchanged
+    bare = WanPlan(n_pods=default.n_pods, conns=default.conns,
+                   pred_bw=default.pred_bw,
+                   compress_bits=default.compress_bits)
+    assert bare.signature() == default.signature()

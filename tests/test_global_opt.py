@@ -1,7 +1,7 @@
 """Global optimization (Eq. 2-3) — paper worked example + invariants."""
 import numpy as np
 
-from repro.core.global_opt import global_optimize
+from repro.core.global_opt import global_optimize, split_budget
 
 PAPER_BW = np.array([[1000, 400, 120],
                      [380, 1000, 130],
@@ -169,3 +169,25 @@ def test_throttle_vectorization_bit_identical_to_row_loop():
                 if j != i and plan.max_bw[i, j] > T:
                     ref[i, j] = T
         np.testing.assert_array_equal(plan.throttle, ref)
+
+
+def test_split_budget_floor_when_budget_equals_tenants():
+    """M == J: the one-connection floor consumes the whole budget —
+    every tenant gets exactly 1 no matter the skew."""
+    s = split_budget(3, np.array([5.0, 1.0, 1.0]))
+    assert (s == 1).all()
+    assert int(s.sum()) == 3
+
+
+def test_split_budget_extreme_skew_repays_floor_bumps():
+    """Near-zero weights floor up to 1 each; the repayment loop must
+    claw the overdraft back from the richest tenant, terminate, and
+    keep every invariant."""
+    w = np.array([1.0, 1e-12, 1e-12, 1e-12])
+    s = split_budget(5, w)
+    assert s.tolist() == [2, 1, 1, 1]       # 5 - 3 floors leaves 2
+    for M in (6, 17, 64):
+        s = split_budget(M, w)
+        assert (s >= 1).all()
+        assert int(s.sum()) <= M
+        assert s[0] == s.max()              # monotone in weight

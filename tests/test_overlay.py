@@ -1,0 +1,354 @@
+"""Overlay routing tier (repro.overlay): route selection, the routed
+water-fill's two-hop contention physics, controller/record wiring, the
+placement layer's routed pricing, and the pinned cable_cut_reroute
+acceptance — routing around a far-link cut strictly beats direct-only
+on post-cut min achievable BW and on placement makespan, while
+``REPRO_OVERLAY=off`` (the default) runs no routed code path at all.
+"""
+import numpy as np
+import pytest
+
+from repro.control import ControllerConfig, WanifyController
+from repro.core.global_opt import global_optimize, relay_candidates
+from repro.core.plan import WanPlan
+from repro.core.predictor import SnapshotPredictor
+from repro.overlay import (DEFAULT_GAIN_MIN, OVERLAY_MODES, RoutedPlan,
+                           overlay_mode, plan_routes)
+from repro.placement.cost import achievable_bw
+from repro.placement.scenario import run_placement_scenario
+from repro.scenarios import get_scenario, run_scenario
+from repro.scenarios.engine import ScenarioEngine
+from repro.wan.simulator import WanSimulator
+
+QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
+
+# the staged cut lands at step 12; the first post-cut replan's routing
+# is in force from step 14 on (step 13's achieved BW is measured before
+# that step's replan chooses the relays)
+SETTLED = 14
+
+
+def quiet_sim(seed=3, **kw):
+    return WanSimulator(seed=seed, **QUIET, **kw)
+
+
+# ----------------------------------------------------------------------
+# Gate resolution
+# ----------------------------------------------------------------------
+def test_overlay_mode_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_OVERLAY", raising=False)
+    assert overlay_mode() == "off"
+    monkeypatch.setenv("REPRO_OVERLAY", "on")
+    assert overlay_mode() == "on"
+    assert overlay_mode("off") == "off"      # explicit argument wins
+    with pytest.raises(ValueError):
+        overlay_mode("sideways")
+    monkeypatch.setenv("REPRO_OVERLAY", "bogus")
+    with pytest.raises(ValueError):
+        overlay_mode()
+    assert OVERLAY_MODES == ("off", "on")
+
+
+def test_env_gate_reaches_controller(monkeypatch):
+    monkeypatch.setenv("REPRO_OVERLAY", "on")
+    ctl = WanifyController(sim=quiet_sim(), predictor=SnapshotPredictor(),
+                           n_pods=4, cfg=ControllerConfig(advance_sim=False))
+    assert ctl.overlay == "on"
+    assert ctl.record[-1].get("overlay") == "on"
+    monkeypatch.delenv("REPRO_OVERLAY")
+    ctl = WanifyController(sim=quiet_sim(), predictor=SnapshotPredictor(),
+                           n_pods=4, cfg=ControllerConfig(advance_sim=False))
+    assert ctl.overlay == "off"
+
+
+def test_fleet_jobs_pin_overlay_off(monkeypatch):
+    """A global $REPRO_OVERLAY=on must not leak into fleet jobs: the
+    arbiter's envelopes model direct per-pair flows only."""
+    from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
+                             default_fleet_forest)
+    monkeypatch.setenv("REPRO_OVERLAY", "on")
+    forest = default_fleet_forest(n_samples=20, n_trees=4, depth=3, seed=7)
+    fleet = FleetController(quiet_sim(), BatchedRfPredictor(forest),
+                            m_total=8)
+    job = fleet.add_job(JobSpec(name="j0", dcs=(0, 1, 2, 3)))
+    assert job.controller.overlay == "off"
+    assert job.controller.routed is None
+
+
+# ----------------------------------------------------------------------
+# RoutedPlan / plan_routes units
+# ----------------------------------------------------------------------
+def _toy_routed():
+    direct = ((1, 2, 1), (2, 1, 3), (1, 3, 1))
+    relays = ((0, 1, 2, 3),)
+    pred = tuple(tuple(100.0 for _ in range(3)) for _ in range(3))
+    return RoutedPlan(n_pods=3, direct=direct, relays=relays, pred_bw=pred)
+
+
+def test_expanded_conns_folds_relay_onto_both_hops():
+    rp = _toy_routed()
+    exp = rp.expanded_conns()
+    base = np.asarray(rp.direct, float)
+    assert exp[0, 1] == base[0, 1] + 3       # hop i -> k
+    assert exp[1, 2] == base[1, 2] + 3       # hop k -> j
+    assert exp[0, 2] == base[0, 2]           # end-to-end pair untouched
+
+
+def test_routed_plan_signature_covers_routing():
+    rp = _toy_routed()
+    sig = rp.signature()
+    assert sig == (3, rp.direct, rp.relays)
+    other = RoutedPlan(n_pods=3, direct=rp.direct, relays=(),
+                       pred_bw=rp.pred_bw)
+    assert other.signature() != sig          # relays are plan identity
+    assert hash(sig) is not None             # cache-keyable
+
+
+def test_plan_routes_no_relay_without_decisive_gain():
+    """Healthy geometry: no candidate clears gain_min, every
+    connection stays on its direct link."""
+    pred = np.array([[1e4, 900.0, 150.0],
+                     [900.0, 1e4, 160.0],
+                     [150.0, 160.0, 1e4]])
+    conns = np.full((3, 3), 4)
+    rp = plan_routes(pred, conns)
+    assert rp.relays == ()
+    assert np.array_equal(np.asarray(rp.direct), conns)
+
+
+def test_plan_routes_picks_best_relay_and_bounds_split():
+    """A collapsed far link with one strong detour: the relay fires,
+    picks the best min-hop candidate, keeps min_direct on the direct
+    link, and never exceeds max_relay_conns."""
+    pred = np.array([[1e4, 800.0, 700.0],
+                     [800.0, 1e4, 5.0],     # (1,2) cut
+                     [700.0, 5.0, 1e4]])
+    conns = np.full((3, 3), 8)
+    np.fill_diagonal(conns, 1)
+    rp = plan_routes(pred, conns, gain_min=2.0, max_relay_conns=4)
+    assert (1, 0, 2, 4) in rp.relays and (2, 0, 1, 4) in rp.relays
+    d = np.asarray(rp.direct)
+    assert d[1, 2] == 4 and d[2, 1] == 4     # total conserved
+    assert d[1, 2] >= 1                      # monitor keeps observing
+    # unbounded split would move nearly everything onto the detour
+    rp2 = plan_routes(pred, conns, gain_min=2.0, max_relay_conns=99)
+    cr2 = dict(((i, j), c) for i, k, j, c in rp2.relays)[(1, 2)]
+    assert cr2 == 7                          # total - min_direct
+
+
+def test_plan_routes_normalizes_by_capture_conns():
+    """pred measured at heterogeneous conns: pair totals alone would
+    fake a gain; per-connection units must kill it."""
+    # per-conn truth is uniform 100 Mbps; both hops of the 0->1->2
+    # detour were measured at 8 conns, the direct (0,2) at 1 — raw
+    # pair totals fake an 8x relay gain that is pure operating point
+    pred = np.array([[1e4, 800.0, 100.0],
+                     [800.0, 1e4, 800.0],
+                     [100.0, 800.0, 1e4]])
+    cap = np.ones((3, 3))
+    for a, b in ((0, 1), (1, 2)):
+        cap[a, b] = cap[b, a] = 8.0
+    conns = np.full((3, 3), 6)
+    assert plan_routes(pred, conns, capture_conns=cap).relays == ()
+    # without the normalization the phantom 8x edge fires a relay
+    assert plan_routes(pred, conns).relays != ()
+
+
+def test_relay_candidates_closeness_pruning():
+    rel = np.array([[1, 2, 3, 3],
+                    [2, 1, 3, 3],
+                    [3, 3, 1, 2],
+                    [3, 3, 2, 1]])
+    # far pair (1,2): both remaining DCs qualify (hops no farther than
+    # the direct class), nearest class-sum first, index tiebreak
+    assert relay_candidates(rel, 1, 2) == [0, 3]
+    # close pair (0,1): a relay would cross a farther class; pruned
+    assert relay_candidates(rel, 0, 1) == []
+    assert relay_candidates(rel, 1, 2, max_candidates=1) == [0]
+
+
+# ----------------------------------------------------------------------
+# waterfill_routed physics
+# ----------------------------------------------------------------------
+def test_relay_flows_charged_on_both_hops():
+    """Relay connections contend on BOTH hop links: every pair sharing
+    either hop loses credited BW when the relay shows up."""
+    sim = quiet_sim()
+    direct = np.ones((sim.N, sim.N))
+    base = sim.waterfill(direct)
+    relays = [(1, 0, 2, 4)]
+    routed = sim.waterfill_routed(direct, relays)
+    assert routed[1, 0] < base[1, 0]         # hop i -> k contended
+    assert routed[0, 2] < base[0, 2]         # hop k -> j contended
+    # ... and the relayed pair's credit is exactly the store-and-
+    # forward bottleneck of the two hop rates on the expanded fill
+    expanded = direct.copy()
+    expanded[1, 0] += 4
+    expanded[0, 2] += 4
+    rate = sim._fill_rates(sim._contending_conns(expanded, None), None)
+    want = direct[1, 2] * rate[1, 2] + 4 * min(rate[1, 0], rate[0, 2])
+    assert routed[1, 2] == pytest.approx(float(want))
+
+
+def test_relay_through_saturated_nic_buys_nothing():
+    """A detour through a DC whose NIC is already saturated cannot beat
+    the direct path — the min-of-hop-rates credit collapses."""
+    sim = quiet_sim()
+    # bury the via-DC (0) in background flows on every link
+    for m in range(1, sim.N):
+        sim.set_background(0, m, 10_000)
+        sim.set_background(m, 0, 10_000)
+    direct = np.ones((sim.N, sim.N)) * 2
+    plain = sim.waterfill(direct)
+    shifted = direct.copy()
+    shifted[1, 2] = shifted[2, 1] = 1        # move a conn onto the relay
+    routed = sim.waterfill_routed(shifted, [(1, 0, 2, 1), (2, 0, 1, 1)])
+    assert routed[1, 2] <= plain[1, 2] * (1 + 1e-9)
+    assert routed[2, 1] <= plain[2, 1] * (1 + 1e-9)
+
+
+def test_waterfill_routed_no_relays_equals_waterfill():
+    sim = quiet_sim()
+    conns = np.ones((sim.N, sim.N)) * 3
+    assert np.array_equal(sim.waterfill_routed(conns, []),
+                          sim.waterfill(conns))
+
+
+# ----------------------------------------------------------------------
+# Controller wiring and plan identity
+# ----------------------------------------------------------------------
+def _on_controller():
+    sim = quiet_sim()
+    ctl = WanifyController(sim=sim, predictor=SnapshotPredictor(),
+                           n_pods=4, cfg=ControllerConfig(advance_sim=False),
+                           overlay="on")
+    return sim, ctl
+
+
+def test_record_gains_relay_fields_only_when_on():
+    sim, ctl = _on_controller()
+    rec = ctl.record[-1]
+    assert rec["overlay"] == "on"
+    assert rec["relays"] == ctl.routed.relays
+    assert rec["routed_signature"] == ctl.routed.signature()
+    off = WanifyController(sim=quiet_sim(), predictor=SnapshotPredictor(),
+                           n_pods=4, cfg=ControllerConfig(advance_sim=False))
+    assert off.routed is None
+    assert "overlay" not in off.record[-1]   # off-path records unchanged
+    assert "relays" not in off.record[-1]
+
+
+def test_cut_link_gets_relayed_on_replan():
+    sim, ctl = _on_controller()
+    assert ctl.routed.relays == ()           # healthy: nothing to route
+    assert ctl.current_routing() is None     # ... so direct execution
+    i, j = sim.regions.index("us-west"), sim.regions.index("ap-south")
+    sim.set_link_factor(i, j, 0.02)
+    ctl.replan(reason="cut")
+    vias = {(s, d): k for s, k, d, _ in ctl.routed.relays}
+    assert (i, j) in vias and (j, i) in vias
+    assert vias[(i, j)] not in (i, j)
+    direct, relays = ctl.current_routing()
+    assert relays == ctl.routed.relays
+    P = ctl.n_pods
+    assert np.array_equal(direct[:P, :P], np.asarray(ctl.routed.direct))
+    # conservation: direct residue + relay conns == the plan's conns
+    plan_c = np.asarray(ctl.plan.conns)
+    for (s, d), k in vias.items():
+        cr = dict(((a, b), c) for a, _, b, c in ctl.routed.relays)[(s, d)]
+        assert ctl.routed.direct[s][d] + cr == plan_c[s, d]
+
+
+# ----------------------------------------------------------------------
+# Placement pricing on the routed surface
+# ----------------------------------------------------------------------
+def test_achievable_bw_prices_relay_credit():
+    pred = ((1e4, 500.0, 10.0), (500.0, 1e4, 10.0), (10.0, 10.0, 1e4))
+    plan = WanPlan(n_pods=3,
+                   conns=((1, 4, 6), (4, 1, 6), (6, 6, 1)),
+                   pred_bw=pred, compress_bits=(32, 32, 32))
+    routing = RoutedPlan(
+        n_pods=3, direct=((1, 4, 2), (4, 1, 6), (6, 6, 1)),
+        relays=((0, 1, 2, 4),), pred_bw=pred)
+    base = achievable_bw(plan, knee=None)
+    routed = achievable_bw(plan, knee=None, routing=routing)
+    # direct term re-priced at the residual conns, plus the relay's
+    # conns x the weaker hop's per-connection prediction
+    assert routed[0, 2] == pytest.approx(10.0 * 2 + 4 * min(500.0, 10.0))
+    assert base[0, 2] == pytest.approx(10.0 * 6)
+    # knee caps the relay's effective connection count too
+    kneed = achievable_bw(plan, knee=3.0, routing=routing)
+    assert kneed[0, 2] == pytest.approx(10.0 * 2 + 3.0 * 10.0)
+    with pytest.raises(ValueError):
+        achievable_bw(plan, routing=RoutedPlan(
+            n_pods=2, direct=((1, 1), (1, 1)), relays=(),
+            pred_bw=((1.0, 1.0), (1.0, 1.0))))
+
+
+# ----------------------------------------------------------------------
+# The pinned acceptance scenario
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def reroute_runs():
+    """cable_cut_reroute at seed 3, direct-only vs routed, same
+    weather; relays captured per step via the engine hook."""
+    out = {}
+    for mode in ("off", "on"):
+        eng = ScenarioEngine(get_scenario("cable_cut_reroute"), seed=3,
+                             overlay=mode)
+        relays_by_step = {}
+
+        def hook(engine, row, relays_by_step=relays_by_step,
+                 ctl=eng.controller):
+            relays_by_step[row.step] = (ctl.routed.relays
+                                        if ctl.routed else ())
+        eng.step_hook = hook
+        out[mode] = (eng.run(), relays_by_step)
+    return out
+
+
+def test_reroute_strictly_beats_direct_min_bw(reroute_runs):
+    """From the first settled post-cut step the routed run's min
+    achievable BW is strictly higher EVERY step, and the detours go
+    through the healthy DCs."""
+    (off, _), (on, relays) = reroute_runs["off"], reroute_runs["on"]
+    off_steps = {s.step: s for s in off.trace.steps}
+    on_steps = {s.step: s for s in on.trace.steps}
+    assert all(on_steps[k].achieved_min > off_steps[k].achieved_min
+               for k in range(SETTLED, len(on_steps)))
+    for k in range(SETTLED, len(on_steps)):
+        assert relays[k] != ()
+        assert all(via in (0, 3) for _, via, _, _ in relays[k])
+    # pre-cut the healthy geometry routes nothing: identical traces
+    assert all(on_steps[k].achieved_min == off_steps[k].achieved_min
+               for k in range(0, 12))
+
+
+def test_reroute_off_matches_default(reroute_runs):
+    """overlay=None (the default gate) is byte-identical to an
+    explicit off run — the gate introduces no routed code path."""
+    (off, relays) = reroute_runs["off"]
+    assert all(r == () for r in relays.values())
+    default = run_scenario(get_scenario("cable_cut_reroute"), seed=3)
+    assert default.trace.to_json().encode() == \
+        off.trace.to_json().encode()
+
+
+@pytest.fixture(scope="module")
+def placement_runs():
+    return {mode: run_placement_scenario("cable_cut_reroute", seed=3,
+                                         overlay=mode)
+            for mode in ("off", "on")}
+
+
+def test_reroute_strictly_lowers_placement_makespan(placement_runs):
+    off, on = placement_runs["off"], placement_runs["on"]
+    off_total = sum(s.makespan_s for s in off.trace.steps)
+    on_total = sum(s.makespan_s for s in on.trace.steps)
+    assert on_total < off_total
+    # and the executed (ground-truth) post-cut min BW is higher too
+    off_min = min(s.achieved_min for s in off.trace.steps
+                  if s.step >= SETTLED)
+    on_min = min(s.achieved_min for s in on.trace.steps
+                 if s.step >= SETTLED)
+    assert on_min > off_min

@@ -201,6 +201,21 @@ def test_cable_cut_discovered_by_periodic_trigger(results):
     assert t.steps[25].plan_sig != t.steps[10].plan_sig
 
 
+def test_cable_cut_reroute_overlay_recovers_min_bw(results):
+    """The staged far-link cut: with the overlay on the engine executes
+    the routed lowering and the settled post-cut min achievable BW
+    strictly beats the direct-only run every step (the full acceptance
+    pin — relays, both-hop charging, placement makespan — lives in
+    tests/test_overlay.py)."""
+    off = {s.step: s.achieved_min
+           for s in results("cable_cut_reroute", seed=3).trace.steps}
+    on = {s.step: s.achieved_min
+          for s in run_scenario(get_scenario("cable_cut_reroute"),
+                                seed=3, overlay="on").trace.steps}
+    assert all(on[k] > off[k] for k in range(14, len(on)))
+    assert all(on[k] == off[k] for k in range(0, 12))   # pre-cut: none
+
+
 def test_diurnal_achieved_bw_tracks_cycle(results):
     """The ground-truth achieved BW follows the scripted sinusoid:
     trough steps deliver less than peak steps."""

@@ -269,3 +269,63 @@ def test_rtt_weight_cached_and_invalidated():
     assert not np.array_equal(w1, w2)
     off = ~np.eye(sim.N, dtype=bool)
     np.testing.assert_allclose(w2[off], w1[off] ** (3.0 / 2.0))
+
+
+def test_static_independent_excludes_own_tenant():
+    """A registered tenant measuring static-independent must not
+    double-count its OWN flows as rival traffic (the `tenant=`
+    self-exclusion every other measure_* mode already has)."""
+    sim = WanSimulator(seed=2, fluct_sigma=0.0)
+    clean = sim.measure_static_independent(4)
+    sim.set_tenant_conns("me", np.full((8, 8), 8.0))
+    named = sim.measure_static_independent(4, tenant="me")
+    assert (named == clean).all()           # own registration excluded
+    anon = sim.measure_static_independent(4)
+    assert anon[0, 1] < clean[0, 1]         # anonymous: flows are rivals
+    # with a real rival present the named call still sees the rival
+    sim.set_tenant_conns("rival", np.full((8, 8), 16.0))
+    both = sim.measure_static_independent(4, tenant="me")
+    assert both[0, 1] < clean[0, 1]
+    assert (both == _static_independent_loop_tenant(sim, 4, "me")).all()
+
+
+def _static_independent_loop_tenant(sim, conns_per_pair, tenant):
+    """Per-pair fills with the caller's registration excluded."""
+    from repro.wan.topology import INTRA_DC_BW
+    N = sim.N
+    out = np.full((N, N), INTRA_DC_BW)
+    for i in range(N):
+        for j in range(N):
+            if i == j:
+                continue
+            c = np.zeros((N, N))
+            c[i, j] = conns_per_pair
+            out[i, j] = sim.waterfill(c, tenant=tenant)[i, j]
+    return out
+
+
+def test_waterfill_tenants_passed_matrices_authoritative():
+    """A tenant mid-replan passes a candidate matrix differing from its
+    registration: the shared fill must contend AND credit at the PASSED
+    matrix — the stale registration (fractional drift included) never
+    enters the aggregate."""
+    a_reg = np.zeros((8, 8)); a_reg[0, 1] = 6.0
+    a_cand = np.zeros((8, 8)); a_cand[0, 1] = 2.3   # fractional candidate
+    b = np.zeros((8, 8)); b[0, 1] = 4.0
+
+    stale = WanSimulator(seed=0, fluct_sigma=0.0)
+    stale.set_tenant_conns("a", a_reg)              # registration lags
+    stale.set_tenant_conns("b", b)
+    per = stale.waterfill_tenants({"a": a_cand, "b": b})
+
+    fresh = WanSimulator(seed=0, fluct_sigma=0.0)
+    fresh.set_tenant_conns("a", a_cand)             # registration matches
+    fresh.set_tenant_conns("b", b)
+    ref = fresh.waterfill_tenants({"a": a_cand, "b": b})
+    for name in ("a", "b"):
+        assert (per[name] == ref[name]).all()       # bit-identical
+    # a registered tenant NOT passed still contends but is not credited
+    stale.set_tenant_conns("c", np.full((8, 8), 8.0))
+    squeezed = stale.waterfill_tenants({"a": a_cand, "b": b})
+    assert squeezed["a"][0, 1] < per["a"][0, 1]
+    assert set(squeezed) == {"a", "b"}
