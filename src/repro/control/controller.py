@@ -82,7 +82,8 @@ class WanifyController:
                  trace_hook: Optional[Callable[[Dict[str, Any]], None]]
                  = None,
                  envelope: Optional[BudgetEnvelope] = None,
-                 overlay: Optional[str] = None):
+                 overlay: Optional[str] = None,
+                 lifecycle: Optional[Any] = None):
         self.sim = sim
         self.predictor = predictor
         self.n_pods = int(n_pods)
@@ -93,6 +94,10 @@ class WanifyController:
         # no routed code path at all, keeping replays byte-identical
         self.overlay = overlay_mode(overlay)
         self.routed: Optional[RoutedPlan] = None
+        # online predictor lifecycle (repro.lifecycle): when a manager
+        # is attached, every replan's predicted matrix passes through
+        # its capacity clamp; None (default) runs no lifecycle code
+        self.lifecycle = lifecycle
         self.monitor = SnapshotMonitor(sim)
         # a consumer may hand in its own log list; both append to it
         self.events: List[str] = events if events is not None else []
@@ -167,6 +172,10 @@ class WanifyController:
             pred = self.predictor.predict_matrix(
                 self.sim.N, raw["snapshot_bw"], raw["mem_util"],
                 raw["cpu_load"], raw["retrans"], raw["dist"])
+        if self.lifecycle is not None:
+            # sanity clamp: the RF may not promise BW beyond what the
+            # lifecycle's windowed percentile capacity has ever seen
+            pred = self.lifecycle.adjust_prediction(pred)
         pods = pred[:self.n_pods, :self.n_pods]
         M = self.cfg.max_conns
         link_cap = None

@@ -148,6 +148,18 @@ class RandomForest:
             self.feat, self.thr, self.leaf = newf, newt, newl
         return self
 
+    def spawn(self, seed: Optional[int] = None) -> "RandomForest":
+        """An UNFITTED forest with this forest's hyperparameters (and
+        `seed`, default: same seed). The online-refresh path
+        (repro.lifecycle) fits the spawn on fresh data and swaps it in
+        as one reference assignment, so a consumer never observes a
+        half-retrained model: the packed (feat, thr, leaf) tensors
+        always come from exactly one completed fit."""
+        return RandomForest(n_trees=self.n_trees, depth=self.depth,
+                            min_leaf=self.min_leaf,
+                            feature_frac=self.feature_frac,
+                            seed=self.seed if seed is None else int(seed))
+
     # ------------------------------------------------------------------
     def predict(self, X: np.ndarray) -> np.ndarray:
         """Reference numpy inference over the complete-tree layout."""

@@ -18,14 +18,12 @@ FEATURE_NAMES = ("n_dcs", "snapshot_bw", "mem_util", "cpu_load",
                  "retransmissions", "distance_miles")
 
 
-def assemble_features(n_dcs: int, snap_bw: np.ndarray, mem_util: np.ndarray,
-                      cpu_load: np.ndarray, retrans: np.ndarray,
-                      dist: np.ndarray) -> np.ndarray:
-    """Vectorize Table 3 into per-pair rows.
-
-    snap_bw/retrans/dist: [N,N]; mem_util (receiver)/cpu_load (sender): [N].
-    Returns X [N*(N-1), 6] for all ordered off-diagonal pairs.
-    """
+def assemble_features_loop(n_dcs: int, snap_bw: np.ndarray,
+                           mem_util: np.ndarray, cpu_load: np.ndarray,
+                           retrans: np.ndarray,
+                           dist: np.ndarray) -> np.ndarray:
+    """Reference double-loop form of :func:`assemble_features` (the
+    historical implementation, kept as the bit-identity test oracle)."""
     N = snap_bw.shape[0]
     rows = []
     for i in range(N):
@@ -37,10 +35,33 @@ def assemble_features(n_dcs: int, snap_bw: np.ndarray, mem_util: np.ndarray,
     return np.asarray(rows, np.float32)
 
 
-def matrix_from_pairs(vals: np.ndarray, N: int,
-                      diag: float = 0.0) -> np.ndarray:
-    """Inverse of `assemble_features`'s row order: fold N*(N-1)
-    per-pair values back into an [N,N] matrix with `diag` filled in."""
+def assemble_features(n_dcs: int, snap_bw: np.ndarray, mem_util: np.ndarray,
+                      cpu_load: np.ndarray, retrans: np.ndarray,
+                      dist: np.ndarray) -> np.ndarray:
+    """Vectorize Table 3 into per-pair rows.
+
+    snap_bw/retrans/dist: [N,N]; mem_util (receiver)/cpu_load (sender): [N].
+    Returns X [N*(N-1), 6] for all ordered off-diagonal pairs, in
+    row-major (i, j) order skipping the diagonal — bit-identical to
+    :func:`assemble_features_loop` (this is the per-tick AND harvest
+    hot path, so it builds the [N,N,6] block in one shot and masks the
+    diagonal instead of appending N*(N-1) Python lists)."""
+    snap_bw = np.asarray(snap_bw)
+    N = snap_bw.shape[0]
+    block = np.empty((N, N, 6), np.float64)
+    block[:, :, 0] = float(n_dcs)
+    block[:, :, 1] = snap_bw
+    block[:, :, 2] = np.asarray(mem_util)[None, :]       # receiver j
+    block[:, :, 3] = np.asarray(cpu_load)[:, None]       # sender i
+    block[:, :, 4] = np.asarray(retrans)
+    block[:, :, 5] = np.asarray(dist)
+    off = ~np.eye(N, dtype=bool)
+    return block[off].astype(np.float32)
+
+
+def matrix_from_pairs_loop(vals: np.ndarray, N: int,
+                           diag: float = 0.0) -> np.ndarray:
+    """Reference loop form of :func:`matrix_from_pairs` (test oracle)."""
     out = np.full((N, N), diag, np.float64)
     k = 0
     for i in range(N):
@@ -48,6 +69,18 @@ def matrix_from_pairs(vals: np.ndarray, N: int,
             if i != j:
                 out[i, j] = vals[k]
                 k += 1
+    return out
+
+
+def matrix_from_pairs(vals: np.ndarray, N: int,
+                      diag: float = 0.0) -> np.ndarray:
+    """Inverse of `assemble_features`'s row order: fold N*(N-1)
+    per-pair values back into an [N,N] matrix with `diag` filled in
+    (one boolean-mask scatter; bit-identical to
+    :func:`matrix_from_pairs_loop`, whose row-major order the mask
+    indexing reproduces)."""
+    out = np.full((N, N), diag, np.float64)
+    out[~np.eye(N, dtype=bool)] = np.asarray(vals, np.float64)
     return out
 
 

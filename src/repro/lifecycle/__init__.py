@@ -1,0 +1,33 @@
+"""Online predictor lifecycle: drift detection over free residuals,
+cost-aware probe scheduling, and deterministic incremental RF refresh.
+
+Gated by ``$REPRO_LIFECYCLE`` / explicit ``lifecycle=`` arguments
+(default off — zero lifecycle code on the historical replay path; the
+trace goldens pin this byte-identically). See
+:class:`repro.lifecycle.manager.LifecycleManager` for the loop.
+"""
+from repro.lifecycle.drift import (DriftConfig, DriftSignal,
+                                   EwmaDriftDetector, ResidualStats)
+from repro.lifecycle.harness import (harvest_scenario_rows,
+                                     pretrain_predictor,
+                                     run_lifecycle_comparison)
+from repro.lifecycle.manager import (LIFECYCLE_MODES, LifecycleConfig,
+                                     LifecycleManager, LifecycleRecord,
+                                     lifecycle_mode)
+from repro.lifecycle.probes import (ProbeConfig, ProbeScheduler,
+                                    baseline_probe_spend)
+from repro.lifecycle.refresh import (RefreshConfig, decay_seed_data,
+                                     refresh_forest)
+from repro.lifecycle.window import (SlidingWindow,
+                                    WindowedPercentileEstimator)
+
+__all__ = [
+    "DriftConfig", "DriftSignal", "EwmaDriftDetector", "ResidualStats",
+    "LIFECYCLE_MODES", "LifecycleConfig", "LifecycleManager",
+    "LifecycleRecord", "lifecycle_mode",
+    "ProbeConfig", "ProbeScheduler", "baseline_probe_spend",
+    "RefreshConfig", "decay_seed_data", "refresh_forest",
+    "SlidingWindow", "WindowedPercentileEstimator",
+    "harvest_scenario_rows", "pretrain_predictor",
+    "run_lifecycle_comparison",
+]

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.control import ControllerConfig, WanifyController
 from repro.core.predictor import SnapshotPredictor
+from repro.lifecycle.manager import LifecycleManager, lifecycle_mode
 from repro.scenarios.events import Timed
 from repro.scenarios.trace import (ScenarioResult, ScenarioTrace, StepTrace,
                                    sig_hash)
@@ -57,7 +58,8 @@ class ScenarioEngine:
     """One deterministic run of a :class:`ScenarioSpec`."""
 
     def __init__(self, spec: ScenarioSpec, seed: int = 0,
-                 predictor: Any = None, overlay: Optional[str] = None):
+                 predictor: Any = None, overlay: Optional[str] = None,
+                 lifecycle: Any = None):
         self.spec = spec
         self.seed = int(seed)
         sim_kw = dict(spec.sim_kwargs)
@@ -67,13 +69,24 @@ class ScenarioEngine:
         cfg_kw = dict(spec.cfg_kwargs)
         cfg_kw.pop("advance_sim", None)    # the engine owns simulated time
         cfg = ControllerConfig(advance_sim=False, **cfg_kw)
+        pred_obj = predictor or SnapshotPredictor()
+        # `lifecycle` gates the online predictor lifecycle
+        # (repro.lifecycle): a ready LifecycleManager is used as-is; a
+        # mode string / None resolves via $REPRO_LIFECYCLE (default
+        # off = no manager, no lifecycle code, byte-identical replays)
+        self.lifecycle: Optional[LifecycleManager] = None
+        if isinstance(lifecycle, LifecycleManager):
+            self.lifecycle = lifecycle
+        elif lifecycle_mode(lifecycle) == "on":
+            self.lifecycle = LifecycleManager(pred_obj, self.sim.N)
         # `overlay` gates Terra-style relay routing (None defers to
         # $REPRO_OVERLAY, default off): when on, the workload executes
         # at the controller's routed lowering — relay flows charged on
         # both hops, credited at the store-and-forward bottleneck
         self.controller = WanifyController(
-            sim=self.sim, predictor=predictor or SnapshotPredictor(),
-            n_pods=spec.n_pods, cfg=cfg, overlay=overlay)
+            sim=self.sim, predictor=pred_obj,
+            n_pods=spec.n_pods, cfg=cfg, overlay=overlay,
+            lifecycle=self.lifecycle)
         self.step = 0
         # a per-step tap for ride-along harnesses (repro.placement):
         # called as step_hook(engine, step_trace_row) after each step's
@@ -192,6 +205,12 @@ class ScenarioEngine:
             # sampled at the same matrix as `achieved`, so in a quiet
             # scenario monitored == achieved exactly, replan step or not
             monitored = ctl.monitor.measure(conns)
+            if self.lifecycle is not None:
+                # lifecycle tick before the trace row is cut, so a
+                # drift-triggered refresh replan lands in this step's
+                # `replans` (and its prediction in this step's columns)
+                self.lifecycle.tick(k, ctl, sim, conns, achieved,
+                                    monitored)
             P = ctl.n_pods
             off = ~np.eye(P, dtype=bool)
             pred = ctl.last_pred[:P, :P]
@@ -225,8 +244,10 @@ class ScenarioEngine:
 
 def run_scenario(spec: ScenarioSpec, seed: int = 0,
                  predictor: Any = None,
-                 overlay: Optional[str] = None) -> ScenarioResult:
+                 overlay: Optional[str] = None,
+                 lifecycle: Any = None) -> ScenarioResult:
     """Build a fresh engine and run the scenario to completion
-    (`overlay` gates relay routing; None defers to $REPRO_OVERLAY)."""
+    (`overlay` gates relay routing, `lifecycle` the predictor
+    lifecycle; None defers to $REPRO_OVERLAY / $REPRO_LIFECYCLE)."""
     return ScenarioEngine(spec, seed=seed, predictor=predictor,
-                          overlay=overlay).run()
+                          overlay=overlay, lifecycle=lifecycle).run()

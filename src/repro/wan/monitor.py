@@ -44,6 +44,17 @@ def measurement_net_cost(seconds: float, n_peers: int,
     return gb * NET_COST_PER_GB
 
 
+def probe_cost_usd(seconds: float, n_dcs: int) -> float:
+    """$ for ONE Eq. 1 measurement occurrence across the cluster:
+    every node pays `seconds` of monitoring-VM time plus the egress of
+    the measurement traffic it exchanges with its N-1 peers. A full
+    20-second probe (`MONITOR_SECONDS`) is ~20x the 1-second snapshot
+    (`SNAPSHOT_SECONDS`) — the cost axis the lifecycle probe scheduler
+    (repro.lifecycle.probes) optimizes."""
+    z = measurement_net_cost(seconds, n_dcs - 1)
+    return n_dcs * (T3_NANO_PER_SEC * seconds + z)
+
+
 def annual_costs(n_dcs: int) -> Dict[str, float]:
     """Reproduces one row of Table 2."""
     O = 365 * 24 * 60 / MONITOR_EVERY_MIN
@@ -82,3 +93,11 @@ class SnapshotMonitor:
         connection matrix actually in force; an idle default-of-ones
         measurement describes a traffic regime the workload is not in."""
         return self.sim.measure_snapshot(conns)
+
+    def probe(self, conns: Optional[np.ndarray] = None) -> np.ndarray:
+        """FULL runtime probe: the stable >=20-second all-pairs
+        measurement of §2.2 (small residual noise, `MONITOR_SECONDS` of
+        measurement traffic). ~20x the snapshot's Eq. 1 cost
+        (`probe_cost_usd`), so callers should spend it deliberately —
+        the lifecycle layer fires one only when drift is suspected."""
+        return self.sim.measure_runtime(conns)

@@ -82,3 +82,50 @@ def test_backends_agree(forest):
                                     depth=rf.depth))
     np.testing.assert_allclose(p_j, p_np, rtol=1e-4, atol=0.05)
     np.testing.assert_allclose(p_k, p_j, rtol=1e-4, atol=0.05)
+
+
+# ----------------------------------------------------------------------
+# Vectorized feature assembly — bit-identical to the loop oracles
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n", [3, 8, 16])
+def test_assemble_features_matches_loop_oracle(n):
+    """The one-shot [N,N,6] assembly must reproduce the historical
+    double loop BIT-identically — it sits on the golden capture path."""
+    from repro.core.predictor import assemble_features, \
+        assemble_features_loop
+    rng = np.random.default_rng(n)
+    snap = rng.uniform(1.0, 900.0, (n, n))
+    mem = rng.uniform(0.05, 0.98, n)
+    cpu = rng.uniform(0.02, 0.98, n)
+    retr = np.rint(rng.uniform(0.0, 40.0, (n, n)))
+    dist = rng.uniform(10.0, 9000.0, (n, n))
+    fast = assemble_features(n, snap, mem, cpu, retr, dist)
+    slow = assemble_features_loop(n, snap, mem, cpu, retr, dist)
+    assert fast.dtype == slow.dtype == np.float32
+    assert np.array_equal(fast, slow)
+
+
+@pytest.mark.parametrize("n", [3, 8, 16])
+def test_matrix_from_pairs_matches_loop_oracle(n):
+    from repro.core.predictor import matrix_from_pairs, \
+        matrix_from_pairs_loop
+    rng = np.random.default_rng(100 + n)
+    vals = rng.uniform(1.0, 500.0, n * (n - 1))
+    fast = matrix_from_pairs(vals, n, diag=123.5)
+    slow = matrix_from_pairs_loop(vals, n, diag=123.5)
+    assert fast.dtype == slow.dtype
+    assert np.array_equal(fast, slow)
+
+
+def test_matrix_from_pairs_roundtrips_assembly_order():
+    """matrix_from_pairs must invert assemble_features' row order."""
+    from repro.core.predictor import assemble_features, matrix_from_pairs
+    n = 5
+    rng = np.random.default_rng(0)
+    snap = rng.uniform(1.0, 900.0, (n, n))
+    X = assemble_features(n, snap, np.zeros(n), np.zeros(n),
+                          np.zeros((n, n)), np.zeros((n, n)))
+    back = matrix_from_pairs(X[:, 1], n, diag=0.0)
+    off = ~np.eye(n, dtype=bool)
+    np.testing.assert_allclose(back[off],
+                               snap.astype(np.float32)[off].astype(float))

@@ -1,0 +1,601 @@
+"""Online predictor lifecycle (drift -> probe -> refresh) test tier.
+
+Four layers of pinning:
+
+  * gating — ``REPRO_LIFECYCLE=off`` (the default) builds NO manager
+    and every historical trace golden replays byte-identical
+    (parametrized per pin);
+  * unit + hypothesis properties for the EWMA drift detector, the
+    windowed percentile estimator, the sliding window, and the
+    deterministic refresh;
+  * backend parity — a refreshed forest predicts the same matrix on
+    numpy / jnp / pallas within the repo's standard tolerance;
+  * the headline recovery pin — after a provider shift under noisy
+    snapshots, the lifecycle run detects, refits and holds residual
+    accuracy while the frozen predictor degrades, at lower Eq. 1
+    monitoring spend than the periodic-full-probe baseline.
+"""
+import dataclasses
+import hashlib
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.forest import RandomForest
+from repro.lifecycle import (DriftConfig, EwmaDriftDetector,
+                             LifecycleConfig, LifecycleManager,
+                             ProbeConfig, ProbeScheduler, RefreshConfig,
+                             SlidingWindow, WindowedPercentileEstimator,
+                             baseline_probe_spend, decay_seed_data,
+                             lifecycle_mode, pretrain_predictor,
+                             refresh_forest, run_lifecycle_comparison)
+from repro.wan.monitor import probe_cost_usd
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+HERE = os.path.dirname(__file__)
+
+
+# ----------------------------------------------------------------------
+# gating: off = no manager, on = manager wired through the stack
+# ----------------------------------------------------------------------
+def test_lifecycle_mode_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_LIFECYCLE", raising=False)
+    assert lifecycle_mode() == "off"
+    assert lifecycle_mode("on") == "on"
+    monkeypatch.setenv("REPRO_LIFECYCLE", "on")
+    assert lifecycle_mode() == "on"
+    assert lifecycle_mode("off") == "off"     # explicit arg beats env
+    with pytest.raises(ValueError):
+        lifecycle_mode("sometimes")
+    monkeypatch.setenv("REPRO_LIFECYCLE", "adaptive")
+    with pytest.raises(ValueError):
+        lifecycle_mode()
+
+
+def test_engine_default_builds_no_manager(monkeypatch):
+    from repro.scenarios import ScenarioEngine, get_scenario
+    monkeypatch.delenv("REPRO_LIFECYCLE", raising=False)
+    spec = dataclasses.replace(get_scenario("provider_shift"), steps=2)
+    eng = ScenarioEngine(spec, seed=0)
+    assert eng.lifecycle is None
+    assert eng.controller.lifecycle is None
+
+
+def test_engine_env_on_builds_manager(monkeypatch):
+    from repro.scenarios import ScenarioEngine, get_scenario
+    monkeypatch.setenv("REPRO_LIFECYCLE", "on")
+    spec = dataclasses.replace(get_scenario("provider_shift"), steps=3)
+    eng = ScenarioEngine(spec, seed=0)
+    assert isinstance(eng.lifecycle, LifecycleManager)
+    assert eng.controller.lifecycle is eng.lifecycle
+    eng.run()
+    assert len(eng.lifecycle.records) == 3
+    assert [r.step for r in eng.lifecycle.records] == [0, 1, 2]
+
+
+def test_engine_accepts_prebuilt_manager():
+    from repro.core.predictor import SnapshotPredictor
+    from repro.scenarios import ScenarioEngine, get_scenario
+    spec = dataclasses.replace(get_scenario("provider_shift"), steps=2)
+    pred = SnapshotPredictor()
+    mgr = LifecycleManager(pred, 8, active=False)
+    eng = ScenarioEngine(spec, seed=0, predictor=pred, lifecycle=mgr)
+    assert eng.lifecycle is mgr
+    eng.run()
+    assert len(mgr.records) == 2
+
+
+# ----------------------------------------------------------------------
+# satellite 1: every historical golden replays byte-identical with
+# REPRO_LIFECYCLE=off — parametrized per pin
+# ----------------------------------------------------------------------
+def _golden_hashes():
+    with open(os.path.join(HERE, "data", "trace_golden.json")) as f:
+        return json.load(f)["hashes"]
+
+
+GOLDEN = _golden_hashes()
+
+
+@pytest.fixture(scope="module")
+def collected_hashes():
+    """Run the golden collector ONCE with the lifecycle explicitly
+    gated off; each parametrized pin then compares its own key."""
+    path = os.path.join(HERE, os.pardir, "tools", "gen_trace_goldens.py")
+    spec = importlib.util.spec_from_file_location("gen_trace_goldens", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    old = os.environ.get("REPRO_LIFECYCLE")
+    os.environ["REPRO_LIFECYCLE"] = "off"
+    try:
+        return mod.collect()
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_LIFECYCLE", None)
+        else:                                       # pragma: no cover
+            os.environ["REPRO_LIFECYCLE"] = old
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_golden_pin_lifecycle_off(key, collected_hashes):
+    """With the lifecycle off, trace `key` is byte-identical to the
+    sha256 pinned before this subsystem existed."""
+    assert key in collected_hashes, f"collector no longer produces {key}"
+    assert collected_hashes[key] == GOLDEN[key]
+
+
+def test_golden_set_spans_all_suites():
+    keys = GOLDEN.keys()
+    for prefix, minimum in (("scenario/", 9), ("fleet/", 4),
+                            ("placement/", 3)):
+        assert sum(k.startswith(prefix) for k in keys) >= minimum
+
+
+# ----------------------------------------------------------------------
+# drift detector: units
+# ----------------------------------------------------------------------
+def _feed(det, seq):
+    """Feed a scalar sequence; return the list of tick indices (0-based
+    position in `seq`) on which a DriftSignal fired."""
+    alarms = []
+    for i, r in enumerate(seq):
+        if det.update(np.asarray(r)) is not None:
+            alarms.append(i)
+    return alarms
+
+
+def test_detector_zero_stream_never_trips():
+    det = EwmaDriftDetector((), DriftConfig())
+    assert _feed(det, [0.0] * 200) == []
+    assert not det.suspicious()
+
+
+def test_detector_signals_within_k_of_step():
+    cfg = DriftConfig(threshold=4.0, k_consecutive=3, warmup=10)
+    det = EwmaDriftDetector((), cfg)
+    onset = 30
+    seq = [0.0] * onset + [1.0] * 10
+    alarms = _feed(det, seq)
+    # z jumps over threshold at `onset`; streak reaches K at onset+K-1
+    # and the signal repeats every tick until reset
+    assert alarms[0] == onset + cfg.k_consecutive - 1
+    assert det.suspicious()
+
+
+def test_detector_signal_structure_and_pairs():
+    cfg = DriftConfig(k_consecutive=2, warmup=5)
+    det = EwmaDriftDetector((3, 3), cfg)
+    r = np.zeros((3, 3))
+    for _ in range(20):
+        assert det.update(r) is None
+    r2 = r.copy()
+    r2[0, 2] = 2.0
+    r2[1, 0] = -2.0
+    assert det.update(r2) is None                   # streak = 1
+    sig = det.update(r2)                            # streak = 2 = K
+    assert sig is not None
+    assert set(sig.pairs) == {(0, 2), (1, 0)}
+    assert sig.z_max > cfg.threshold
+    assert sig.consec_max == 2
+
+
+def test_detector_baseline_frozen_under_suspicion():
+    """A suspicious pair must not talk its drift into the baseline."""
+    det = EwmaDriftDetector((), DriftConfig(warmup=5))
+    for _ in range(20):
+        det.update(np.asarray(0.0))
+    mean_before = float(det.mean)
+    for _ in range(6):
+        det.update(np.asarray(3.0))                 # sustained drift
+    assert float(det.mean) == pytest.approx(mean_before)
+    assert det.suspicious()
+
+
+def test_detector_streak_resets_on_calm_tick():
+    cfg = DriftConfig(k_consecutive=3, warmup=5)
+    det = EwmaDriftDetector((), cfg)
+    for _ in range(20):
+        det.update(np.asarray(0.0))
+    det.update(np.asarray(2.0))
+    det.update(np.asarray(2.0))
+    assert int(det.consec) == 2
+    det.update(np.asarray(0.0))                     # calm tick
+    assert int(det.consec) == 0
+    assert not det.suspicious()
+
+
+def test_detector_reset_forgets_everything():
+    det = EwmaDriftDetector((), DriftConfig(warmup=5))
+    _feed(det, [0.0] * 15 + [5.0] * 5)
+    assert det.suspicious()
+    det.reset()
+    assert not det.suspicious()
+    assert det.ticks == 0
+    assert _feed(det, [0.0] * 50) == []
+
+
+# ----------------------------------------------------------------------
+# satellite 2a: drift-detector hypothesis properties
+# ----------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @given(st.floats(-10.0, 10.0, allow_nan=False),
+           st.integers(20, 120))
+    @settings(max_examples=30, deadline=None)
+    def test_property_constant_stream_no_false_positive(value, n):
+        """Any constant residual stream standardizes to z = 0 forever
+        — no false positive regardless of the constant's size."""
+        det = EwmaDriftDetector((), DriftConfig())
+        assert _feed(det, [value] * n) == []
+
+    @given(st.floats(0.2, 8.0), st.integers(10, 40))
+    @settings(max_examples=30, deadline=None)
+    def test_property_sustained_step_detected_within_k(delta, onset):
+        """A sustained step whose standardized magnitude clears the
+        threshold (delta >= thr * sqrt(var_floor) here) is signalled
+        within k_consecutive ticks of onset."""
+        cfg = DriftConfig()
+        det = EwmaDriftDetector((), cfg)
+        seq = [0.0] * max(onset, cfg.warmup) + [delta] * (
+            cfg.k_consecutive + 2)
+        alarms = _feed(det, seq)
+        assert alarms, "sustained step never signalled"
+        assert alarms[0] - max(onset, cfg.warmup) <= cfg.k_consecutive - 1
+
+    @given(st.lists(st.floats(-5.0, 5.0, allow_nan=False),
+                    min_size=20, max_size=80))
+    @settings(max_examples=30, deadline=None)
+    def test_property_sign_convention_invariance(seq):
+        """Feeding -r trips at exactly the same ticks as r: detection
+        must not care which way achieved/predicted is oriented."""
+        a = EwmaDriftDetector((), DriftConfig())
+        b = EwmaDriftDetector((), DriftConfig())
+        assert _feed(a, seq) == _feed(b, [-x for x in seq])
+
+
+# ----------------------------------------------------------------------
+# windowed percentile estimator
+# ----------------------------------------------------------------------
+def test_estimator_validates_args():
+    with pytest.raises(ValueError):
+        WindowedPercentileEstimator((2, 2), window=0)
+    with pytest.raises(ValueError):
+        WindowedPercentileEstimator((2, 2), q=120.0)
+
+
+def test_estimator_empty_passthrough_and_none_capacity():
+    est = WindowedPercentileEstimator((3, 3))
+    assert est.capacity() is None
+    pred = np.full((3, 3), 777.0)
+    out = est.clamp_matrix(pred)
+    assert np.array_equal(out, pred)
+    assert out is not pred                          # always a copy
+
+
+def test_estimator_clamp_off_diagonal_only():
+    est = WindowedPercentileEstimator((3, 3), window=4, q=95.0)
+    est.push(np.full((3, 3), 100.0))
+    pred = np.full((3, 3), 500.0)
+    np.fill_diagonal(pred, 9999.0)
+    out = est.clamp_matrix(pred, headroom=1.5)
+    off = ~np.eye(3, dtype=bool)
+    assert np.allclose(out[off], 150.0)             # 1.5 x capacity
+    assert np.allclose(np.diag(out), 9999.0)        # diag untouched
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 10),
+           st.floats(0.0, 100.0))
+    @settings(max_examples=30, deadline=None)
+    def test_property_capacity_within_data_range(seed, n_push, q):
+        rng = np.random.default_rng(seed)
+        est = WindowedPercentileEstimator((4, 4), window=6, q=q)
+        samples = rng.uniform(1.0, 1000.0, (n_push, 4, 4))
+        for s in samples:
+            est.push(s)
+        tail = samples[-min(n_push, 6):]
+        cap = est.capacity()
+        assert np.all(cap >= tail.min(axis=0) - 1e-9)
+        assert np.all(cap <= tail.max(axis=0) + 1e-9)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 100.0),
+           st.floats(0.0, 100.0))
+    @settings(max_examples=30, deadline=None)
+    def test_property_capacity_monotone_in_quantile(seed, q1, q2):
+        rng = np.random.default_rng(seed)
+        est = WindowedPercentileEstimator((3, 3), window=8)
+        for _ in range(5):
+            est.push(rng.uniform(1.0, 1000.0, (3, 3)))
+        lo, hi = sorted((q1, q2))
+        assert np.all(est.capacity(lo) <= est.capacity(hi) + 1e-9)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_property_window_roll_stability(seed, extra):
+        """Pushing window+extra samples is equivalent to a fresh
+        estimator fed only the last `window` of them."""
+        rng = np.random.default_rng(seed)
+        window = 5
+        samples = rng.uniform(1.0, 1000.0, (window + extra, 2, 2))
+        rolled = WindowedPercentileEstimator((2, 2), window=window)
+        for s in samples:
+            rolled.push(s)
+        fresh = WindowedPercentileEstimator((2, 2), window=window)
+        for s in samples[-window:]:
+            fresh.push(s)
+        assert rolled.n_samples == fresh.n_samples == window
+        assert np.array_equal(rolled.capacity(), fresh.capacity())
+
+
+# ----------------------------------------------------------------------
+# sliding harvest window
+# ----------------------------------------------------------------------
+def test_sliding_window_trims_with_partial_chunk_split():
+    w = SlidingWindow(capacity=5)
+    X1 = np.arange(18, dtype=np.float32).reshape(3, 6)
+    y1 = np.array([10.0, 11.0, 12.0], np.float32)
+    X2 = X1 + 100
+    y2 = y1 + 100
+    w.push(X1, y1)
+    w.push(X2, y2)                  # 6 rows -> oldest row must fall off
+    assert w.n_rows == 5
+    X, y = w.rows()
+    assert np.array_equal(y, np.array([11, 12, 110, 111, 112],
+                                      np.float32))
+    assert np.array_equal(X[0], X1[1])              # chunk split kept tail
+
+
+def test_sliding_window_clear_and_empty_rows():
+    w = SlidingWindow(capacity=8)
+    X, y = w.rows()
+    assert X.shape == (0, 6) and y.shape == (0,)
+    w.push(np.zeros((4, 6), np.float32), np.ones(4, np.float32))
+    assert w.n_rows == 4
+    w.clear()
+    assert w.n_rows == 0
+    assert w.rows()[1].shape == (0,)
+
+
+def test_sliding_window_validates():
+    with pytest.raises(ValueError):
+        SlidingWindow(0)
+    w = SlidingWindow(4)
+    with pytest.raises(ValueError):
+        w.push(np.zeros((3, 6)), np.zeros(2))
+
+
+# ----------------------------------------------------------------------
+# satellite 3: refresh determinism + backend parity
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def refresh_inputs():
+    rng = np.random.default_rng(42)
+    seed_X = rng.uniform(0, 500, (300, 6)).astype(np.float32)
+    seed_y = rng.uniform(1, 400, 300).astype(np.float32)
+    win_X = rng.uniform(0, 500, (250, 6)).astype(np.float32)
+    win_y = rng.uniform(1, 200, 250).astype(np.float32)
+    template = RandomForest(n_trees=12, depth=6, min_leaf=4,
+                            seed=0).fit(seed_X, seed_y)
+    return template, seed_X, seed_y, win_X, win_y
+
+
+def test_refresh_is_bit_deterministic(refresh_inputs):
+    """Same (template, window, seed data, cfg) => bit-identical packed
+    (feat, thr, leaf) tensors, twice over."""
+    template, sX, sy, wX, wy = refresh_inputs
+    cfg = RefreshConfig(seed=7)
+    a = refresh_forest(template, wX, wy, sX, sy, cfg)
+    b = refresh_forest(template, wX, wy, sX, sy, cfg)
+    for ta, tb in zip(a.packed(), b.packed()):
+        assert np.array_equal(ta, tb)
+
+
+def test_refresh_never_mutates_template(refresh_inputs):
+    template, sX, sy, wX, wy = refresh_inputs
+    before = [t.copy() for t in template.packed()]
+    out = refresh_forest(template, wX, wy, sX, sy, RefreshConfig())
+    assert out is not template
+    for t0, t1 in zip(before, template.packed()):
+        assert np.array_equal(t0, t1)
+
+
+def test_refresh_requires_training_rows(refresh_inputs):
+    template = refresh_inputs[0]
+    empty_X = np.zeros((0, 6), np.float32)
+    empty_y = np.zeros(0, np.float32)
+    with pytest.raises(ValueError):
+        refresh_forest(template, empty_X, empty_y, None, None)
+    # window-only (no seed set) is fine
+    wX, wy = refresh_inputs[3], refresh_inputs[4]
+    assert refresh_forest(template, wX, wy).packed()[0].shape[0] == 12
+
+
+def test_decay_seed_data_deterministic_subset():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(0, 1, (100, 6)).astype(np.float32)
+    y = np.arange(100, dtype=np.float32)
+    Xa, ya = decay_seed_data(X, y, 0.25, seed=3)
+    Xb, yb = decay_seed_data(X, y, 0.25, seed=3)
+    assert len(ya) == 25
+    assert np.array_equal(ya, yb) and np.array_equal(Xa, Xb)
+    assert set(ya.tolist()) <= set(y.tolist())      # a true subset
+    assert np.all(np.diff(ya) > 0)                  # sorted row order
+    assert decay_seed_data(X, y, 0.0, seed=3)[1].shape == (0,)
+
+
+def test_refreshed_predictor_backend_parity(refresh_inputs):
+    """numpy / jnp / pallas predictions of a REFRESHED forest agree
+    within the repo's standard parity tolerance."""
+    from repro.core.predictor import BwPredictor
+    template, sX, sy, wX, wy = refresh_inputs
+    pred = BwPredictor(refresh_forest(template, wX, wy, sX, sy,
+                                      RefreshConfig()))
+    n = 6
+    rng = np.random.default_rng(5)
+    snap = rng.uniform(10, 400, (n, n))
+    mem = rng.uniform(0, 1, n)
+    cpu = rng.uniform(0, 1, n)
+    retr = np.rint(rng.uniform(0, 20, (n, n)))
+    dist = rng.uniform(100, 9000, (n, n))
+    base = pred.predict_matrix(n, snap, mem, cpu, retr, dist,
+                               backend="numpy")
+    for backend in ("jnp", "pallas"):
+        other = np.asarray(pred.predict_matrix(
+            n, snap, mem, cpu, retr, dist, backend=backend))
+        np.testing.assert_allclose(other, base, rtol=1e-4, atol=0.05)
+
+
+# ----------------------------------------------------------------------
+# cost-aware probe scheduling
+# ----------------------------------------------------------------------
+def test_scheduler_quiet_ticks_never_probe():
+    s = ProbeScheduler(8)
+    assert not any(s.want_full(k, suspicious=False) for k in range(50))
+    assert s.spend_usd == 0.0 and s.full_probes == 0
+
+
+def test_scheduler_cooldown_gates_full_probes():
+    s = ProbeScheduler(8, ProbeConfig(cooldown_ticks=3))
+    assert s.want_full(10, True)
+    s.charge_full(10)
+    assert not s.want_full(11, True)
+    assert not s.want_full(12, True)
+    assert s.want_full(13, True)                    # cooldown elapsed
+
+
+def test_scheduler_spend_arithmetic():
+    cfg = ProbeConfig()
+    s = ProbeScheduler(8, cfg)
+    s.charge_full(0)
+    s.charge_full(5)
+    s.charge_snapshot(7)
+    want = (2 * probe_cost_usd(cfg.probe_seconds, 8)
+            + 7 * probe_cost_usd(cfg.snapshot_seconds, 8))
+    assert s.spend_usd == pytest.approx(want)
+    assert s.full_probes == 2 and s.snapshots == 7
+
+
+def test_baseline_probe_spend_matches_cadence():
+    """40 steps x 10 simulated min at a 30-min cadence = 13 probes."""
+    cfg = ProbeConfig()
+    want = 13 * probe_cost_usd(cfg.probe_seconds, 8)
+    assert baseline_probe_spend(40, 8) == pytest.approx(want)
+    assert baseline_probe_spend(0, 8) == 0.0
+
+
+# ----------------------------------------------------------------------
+# manager behavior outside the headline scenario
+# ----------------------------------------------------------------------
+def test_shadow_manager_never_clamps():
+    from repro.core.predictor import SnapshotPredictor
+    mgr = LifecycleManager(SnapshotPredictor(), 3, active=False)
+    mgr.estimator.push(np.full((3, 3), 10.0))
+    pred = np.full((3, 3), 1e6)
+    assert np.array_equal(mgr.adjust_prediction(pred), pred)
+
+
+def test_active_manager_clamps_against_capacity():
+    from repro.core.predictor import SnapshotPredictor
+    mgr = LifecycleManager(SnapshotPredictor(), 3)
+    mgr.estimator.push(np.full((3, 3), 10.0))
+    out = mgr.adjust_prediction(np.full((3, 3), 1e6))
+    off = ~np.eye(3, dtype=bool)
+    assert np.allclose(out[off], 15.0)              # headroom 1.5 x 10
+
+
+def test_snapshot_predictor_cannot_refresh():
+    from repro.core.predictor import SnapshotPredictor
+    assert not LifecycleManager(SnapshotPredictor(), 8).can_refresh()
+
+
+def test_quiet_scenario_on_mode_stays_silent():
+    """With the default snapshot-ablation predictor in a QUIET-ish
+    scenario the residual stream carries no drift: lifecycle=on must
+    spend ZERO full-probe dollars and never signal or refit."""
+    from repro.scenarios import ScenarioEngine, get_scenario
+    spec = dataclasses.replace(get_scenario("skew_ramp"), steps=12)
+    eng = ScenarioEngine(spec, seed=3, lifecycle="on")
+    assert eng.lifecycle is not None
+    eng.run()
+    mgr = eng.lifecycle
+    assert mgr.signals == []
+    assert mgr.refreshes == 0
+    assert mgr.scheduler.full_probes == 0
+    assert len(mgr.records) == 12
+
+
+# ----------------------------------------------------------------------
+# the headline recovery pin (provider_shift_drift, seed 3)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def comparison():
+    return run_lifecycle_comparison(scenario="provider_shift_drift",
+                                    seed=3, pre_steps=15)
+
+
+def test_recovery_preshift_series_identical(comparison):
+    """Before the shift the shadow and active runs are the SAME
+    deterministic replay — residuals match to the last bit."""
+    fr = comparison["modes"]["frozen"]["resid"]
+    lc = comparison["modes"]["lifecycle"]["resid"]
+    assert fr[:15] == lc[:15]
+
+
+def test_recovery_drift_detected_promptly(comparison):
+    lc = comparison["modes"]["lifecycle"]
+    assert lc["signal_steps"], "no drift signal after the shift"
+    assert 15 <= lc["signal_steps"][0] <= 20
+    assert lc["refresh_steps"], "drift never produced a refit"
+    assert 15 <= lc["refresh_steps"][0] <= 22
+    assert lc["refreshes"] >= 1
+
+
+def test_recovery_refreshed_beats_frozen_accuracy(comparison):
+    """Post-recovery (steps 25+) the refreshed predictor holds residual
+    accuracy while the frozen one keeps degrading."""
+    fr = comparison["modes"]["frozen"]["resid"]
+    lc = comparison["modes"]["lifecycle"]["resid"]
+    fr_post = float(np.mean(fr[25:]))
+    lc_post = float(np.mean(lc[25:]))
+    assert lc_post < 0.3 < fr_post
+    assert lc_post < fr_post
+
+
+def test_recovery_costs_less_than_periodic_probing(comparison):
+    """The drift-gated probe schedule undercuts the frozen baseline's
+    Tetrium-cadence full probing in Eq. 1 dollars."""
+    fr = comparison["modes"]["frozen"]
+    lc = comparison["modes"]["lifecycle"]
+    assert fr["full_probes"] == 0                   # shadow never probes
+    assert lc["full_probes"] >= 1                   # but spent SOME
+    assert lc["monitor_usd"] < 0.75 * fr["monitor_usd"]
+
+
+def test_recovery_frozen_mode_is_pure_shadow(comparison):
+    """The frozen run's trace is byte-identical to a plain engine run
+    with the same pretrained predictor and NO manager at all — the
+    shadow observes without perturbing."""
+    from repro.scenarios import ScenarioEngine, get_scenario
+    spec = get_scenario("provider_shift_drift")
+    predictor, _, _ = pretrain_predictor(spec, seed=3, pre_steps=15)
+    res = ScenarioEngine(spec, seed=3, predictor=predictor).run()
+    sha = hashlib.sha256(res.trace.to_json().encode()).hexdigest()
+    assert comparison["modes"]["frozen"]["trace_sha"] == sha
+
+
+def test_recovery_lifecycle_config_defaults():
+    """The headline pins ride on these defaults — changing them is a
+    reviewed decision, not an accident."""
+    cfg = LifecycleConfig()
+    assert cfg.drift.k_consecutive == 3
+    assert cfg.drift.threshold == 4.0
+    assert cfg.refresh.min_rows == 224
+    assert cfg.probes.cooldown_ticks == 3
+    assert cfg.clamp_headroom == 1.5
