@@ -9,7 +9,11 @@ and reports, per fleet size:
   * RF kernel launches (== ticks, fleet-size independent);
   * per-job credited min-link BW plus Jain's fairness index over the
     priority-normalized min BW (bw_j / w_j): 1.0 = perfectly
-    weighted-fair.
+    weighted-fair;
+  * an `sle` block per fleet size — the Mist-style health rollup from
+    repro.obs.sle over the run's tick trace (capacity, fairness,
+    responsiveness, Eq. 1 monitoring dollars; accuracy is null — fleet
+    traces carry no predicted-BW columns).
 
 Run:  PYTHONPATH=src python benchmarks/fleet_bench.py
           [--out FILE] [--json [PATH]] [--smoke]
@@ -31,6 +35,8 @@ except ImportError:            # run as a script: sys.path[0] is benchmarks/
     from common import bench_parser, emit
 from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
                          default_fleet_forest)
+from repro.fleet.trace import FleetTrace, tick_to_step
+from repro.obs import fleet_sle, jain_index
 from repro.wan.simulator import WanSimulator
 
 QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
@@ -53,14 +59,10 @@ def build_fleet(n_jobs: int, forest, seed: int = 0) -> FleetController:
                            jobs=jobs)
 
 
-def jain_index(xs: np.ndarray) -> float:
-    """Jain's fairness index: (sum x)^2 / (n * sum x^2), in (0, 1]."""
-    xs = np.asarray(xs, np.float64)
-    return float(xs.sum() ** 2 / (len(xs) * (xs ** 2).sum()))
-
-
 def bench_fleet(seed: int = 0, ticks: int = TICKS, smoke: bool = False):
-    """One row per fleet size: latency scaling + weighted fairness."""
+    """One row per fleet size: latency scaling + weighted fairness
+    (`jain_index` comes from repro.obs — one fairness definition
+    repo-wide)."""
     forest = default_fleet_forest()
     rows = []
     sizes = SMOKE_JOB_SIZES if smoke else JOB_SIZES
@@ -69,10 +71,12 @@ def bench_fleet(seed: int = 0, ticks: int = TICKS, smoke: bool = False):
         fleet.tick()                              # warm the jit caches
         wall = []
         last = None
+        trace = FleetTrace(f"bench_{n_jobs}jobs", seed)
         for _ in range(ticks):
             t0 = time.perf_counter()
             last = fleet.tick()
             wall.append(time.perf_counter() - t0)
+            trace.steps.append(tick_to_step(last))
         norm_min_bw = np.array([r["achieved_min"] / r["priority"]
                                 for r in last["jobs"]])
         rows.append({
@@ -84,6 +88,7 @@ def bench_fleet(seed: int = 0, ticks: int = TICKS, smoke: bool = False):
             "min_bw_mbps": {r["name"]: round(r["achieved_min"], 1)
                             for r in last["jobs"]},
             "weighted_fairness_jain": round(jain_index(norm_min_bw), 3),
+            "sle": fleet_sle(trace, n_dcs=fleet.sim.N),
         })
         sys.stderr.write(f"[fleet] {n_jobs} jobs: "
                          f"{rows[-1]['tick_mean_ms']} ms/tick\n")

@@ -1,13 +1,17 @@
 """Render the EXPERIMENTS.md dry-run / roofline tables from the
-dryrun JSONs.  PYTHONPATH=src:. python -m benchmarks.report"""
+dryrun JSONs.  PYTHONPATH=src:. python -m benchmarks.report
+
+Thin wrapper: the actual renderers live in `repro.obs.export`
+(`render_dryrun_table` / `render_dryrun_summary`), the one canonical
+human-readable report path `tools/obsctl.py summarize` also uses —
+this module only resolves the benchmarks/results/ file layout.
+"""
 from __future__ import annotations
 
 import json
 import os
 
-
-def fmt_bytes(b):
-    return f"{b / 2 ** 30:.2f}"
+from repro.obs.export import render_dryrun_summary, render_dryrun_table
 
 
 def load(mesh, sync="wanify"):
@@ -20,59 +24,12 @@ def load(mesh, sync="wanify"):
 
 
 def table(mesh):
-    cells = load(mesh)
-    out = []
-    out.append(f"\n### {mesh}-pod mesh "
-               f"({'2x16x16 (pod,data,model)' if mesh == 'multi' else '16x16 (data,model)'})\n")
-    out.append("| arch | shape | HBM/dev GiB | t_comp s | t_mem s | t_coll s"
-               " | dominant | useful-FLOPs | roofline-frac | notes |")
-    out.append("|---|---|---|---|---|---|---|---|---|---|")
-    for c in cells:
-        if c["status"] == "skipped":
-            out.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — |"
-                       f" — | — | SKIP: {c['reason'][:60]} |")
-            continue
-        if c["status"] == "error":
-            out.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — |"
-                       f" — | — | ERROR {c['error'][:60]} |")
-            continue
-        r = c["roofline"]
-        note = ""
-        if c["hbm_per_device"] > 16e9:
-            note = "over 16GB HBM"
-        dci = f" dci={r['dci_bytes'] / 2 ** 30:.2f}GiB" \
-            if r["dci_bytes"] else ""
-        out.append(
-            f"| {c['arch']} | {c['shape']} | {fmt_bytes(c['hbm_per_device'])}"
-            f" | {r['t_compute']:.2e} | {r['t_memory']:.2e}"
-            f" | {r['t_collective']:.2e} | {r['dominant']}"
-            f" | {r['useful_flops_ratio']:.2f}"
-            f" | {r['roofline_fraction']:.3f} | {note}{dci} |")
-    return "\n".join(out)
+    return render_dryrun_table(load(mesh), mesh)
 
 
 def summary():
-    rows = []
-    for mesh in ("single", "multi"):
-        cells = load(mesh)
-        ok = [c for c in cells if c["status"] == "ok"]
-        if not ok:
-            continue
-        doms = {}
-        for c in ok:
-            doms[c["roofline"]["dominant"]] = \
-                doms.get(c["roofline"]["dominant"], 0) + 1
-        worst = min(ok, key=lambda c: c["roofline"]["roofline_fraction"])
-        coll = max(ok, key=lambda c: c["roofline"]["t_collective"] /
-                   max(c["roofline"]["t_compute"] +
-                       c["roofline"]["t_memory"], 1e-12))
-        rows.append(f"- **{mesh}**: {len(ok)} ok / "
-                    f"{sum(c['status'] == 'skipped' for c in cells)} skipped; "
-                    f"dominant terms: {doms}; worst roofline fraction "
-                    f"{worst['roofline']['roofline_fraction']:.3f} "
-                    f"({worst['arch']}x{worst['shape']}); most "
-                    f"collective-bound: {coll['arch']}x{coll['shape']}")
-    return "\n".join(rows)
+    return render_dryrun_summary({mesh: load(mesh)
+                                  for mesh in ("single", "multi")})
 
 
 if __name__ == "__main__":

@@ -13,7 +13,13 @@ Output schema (per scenario):
   {"scenario": ..., "seed": ..., "steps": ..., "replans": {reason: n},
    "throughput_mbps": ..., "achieved_min_mbps": ...,
    "achieved_mean_mbps": ..., "distinct_plans": ...,
-   "cache_builds": ..., "cache_hits": ..., "wall_s": ...}
+   "cache_builds": ..., "cache_hits": ..., "wall_s": ...,
+   "sle": {"band", "accuracy", "capacity", "fairness",
+           "responsiveness_steps", "monitoring_usd"}}
+
+The `sle` block is the Mist-style health rollup from repro.obs.sle:
+prediction-accuracy / capacity / fairness SLEs, replan responsiveness,
+and the Eq. 1 monitoring-cost meter.
 """
 from __future__ import annotations
 
@@ -24,7 +30,8 @@ try:
     from benchmarks.common import bench_parser, emit
 except ImportError:            # run as a script: sys.path[0] is benchmarks/
     from common import bench_parser, emit
-from repro.scenarios import get_scenario, run_scenario, scenario_names
+from repro.obs import scenario_sle
+from repro.scenarios import ScenarioEngine, get_scenario, scenario_names
 
 SEED = 0
 SMOKE_STEPS = 8
@@ -37,9 +44,11 @@ def bench_scenarios(seed: int = SEED, smoke: bool = False):
         if smoke:
             spec.steps = min(spec.steps, SMOKE_STEPS)
         t0 = time.time()
-        res = run_scenario(spec, seed=seed)
+        eng = ScenarioEngine(spec, seed=seed)
+        res = eng.run()
         row = res.summary()
         row["wall_s"] = round(time.time() - t0, 3)
+        row["sle"] = scenario_sle(res.trace, n_dcs=eng.sim.N)
         rows.append(row)
         sys.stderr.write(f"[scenarios] {name} done in {row['wall_s']}s\n")
     return rows

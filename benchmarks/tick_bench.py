@@ -9,7 +9,11 @@ Measures the PR-6 tentpole end to end:
   * `tick` rows — whole arbitration epochs at fleet scale: the
     sequential `FleetController.tick` loop vs `FusedFleet.run` (the
     same closed loop as ONE `lax.scan` launch) vs `FusedFleet.sweep`
-    (B scenario variants x T steps vmapped into one launch).
+    (B scenario variants x T steps vmapped into one launch);
+  * `obs` rows — the sequential tick with the repro.obs span tracer
+    off vs on (best-of-3), pinning the obs-on overhead. The CI
+    bench-smoke guard asserts `overhead_frac < 0.05` on the committed
+    BENCH_tick.json.
 
 `steps_per_s` counts arbitration epochs per wall-clock second; the
 sweep row counts every variant's epochs (B x T per launch). jit
@@ -50,7 +54,8 @@ SMOKE_N_JOBS, SMOKE_STEPS, SMOKE_SWEEP_B = 6, 6, 4
 FILL_BATCH, SMOKE_FILL_BATCH = 64, 8
 
 
-def build_fleet(n_jobs: int, forest, seed: int = 0) -> FleetController:
+def build_fleet(n_jobs: int, forest, seed: int = 0,
+                obs: str = "off") -> FleetController:
     """`n_jobs` 4-DC jobs whose slices tile-and-overlap the 8-DC mesh
     (the fleet_bench pattern, under the fused noise contract)."""
     sim = WanSimulator(seed=seed, **QUIET)
@@ -60,7 +65,7 @@ def build_fleet(n_jobs: int, forest, seed: int = 0) -> FleetController:
                 priority=PRIORITIES[j % len(PRIORITIES)])
         for j in range(n_jobs))
     return FleetController(sim, BatchedRfPredictor(forest), m_total=8,
-                           jobs=jobs)
+                           jobs=jobs, obs=obs)
 
 
 def bench_waterfill(batch: int, seed: int = 0) -> list:
@@ -154,6 +159,38 @@ def bench_ticks(n_jobs: int, steps: int, sweep_b: int,
     return rows
 
 
+def bench_obs_overhead(n_jobs: int, steps: int, seed: int = 0) -> list:
+    """Sequential tick with the span tracer off vs on, best-of-3 runs
+    each (dampens single-core scheduler noise), same fleet config.
+    Obs-on must stay passive AND cheap: the committed `overhead_frac`
+    is gated < 5% by the CI bench-smoke job."""
+    forest = default_fleet_forest()
+
+    def timed(obs: str) -> float:
+        best = float("inf")
+        for _ in range(3):
+            fleet = build_fleet(n_jobs, forest, seed=seed, obs=obs)
+            fleet.tick()                       # warm the jit caches
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                fleet.tick()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_off = timed("off")
+    t_on = timed("on")
+    rows = [
+        {"kind": "obs", "mode": "off", "n_jobs": n_jobs, "steps": steps,
+         "steps_per_s": round(steps / t_off, 2)},
+        {"kind": "obs", "mode": "on", "n_jobs": n_jobs, "steps": steps,
+         "steps_per_s": round(steps / t_on, 2),
+         "overhead_frac": round(max(t_on - t_off, 0.0) / t_off, 4)},
+    ]
+    sys.stderr.write(f"[tick] obs overhead: "
+                     f"{rows[1]['overhead_frac']:.2%}\n")
+    return rows
+
+
 def main() -> None:
     """CLI entry point; prints (or writes) one JSON document."""
     ap = bench_parser(__doc__, "tick")
@@ -166,6 +203,7 @@ def main() -> None:
         batch = FILL_BATCH
     rows = bench_waterfill(batch, seed=args.seed)
     rows += bench_ticks(n_jobs, steps, sweep_b, seed=args.seed)
+    rows += bench_obs_overhead(n_jobs, steps, seed=args.seed)
     emit("tick", rows, args)
 
 

@@ -37,6 +37,8 @@ import numpy as np
 from repro.core.global_opt import global_optimize
 from repro.core.local_opt import AimdAgent
 from repro.core.plan import WanPlan
+from repro.obs.registry import MetricsRegistry
+from repro.obs.spans import NULL_TRACER
 from repro.overlay.routing import RoutedPlan, overlay_mode, plan_routes
 from repro.wan.monitor import SnapshotMonitor
 from repro.wan.simulator import WanSimulator
@@ -104,8 +106,18 @@ class WanifyController:
         self.record: List[Dict[str, Any]] = []
         self.trace_hook = trace_hook
         self.plan_cache: Dict[Tuple, Any] = {}
-        self.cache_builds = 0
-        self.cache_hits = 0
+        # ad-hoc counters live on the obs registry (repro.obs);
+        # `cache_builds`/`cache_hits` stay readable as properties
+        self.metrics = MetricsRegistry("controller")
+        self._m_builds = self.metrics.counter(
+            "cache_builds", help="plan-cache misses (artifacts lowered)")
+        self._m_hits = self.metrics.counter(
+            "cache_hits", help="plan-cache reuses")
+        self._m_replans = self.metrics.counter(
+            "replans_total", help="full loop iterations run")
+        # span tracer: NULL_TRACER unless a harness installs a real one
+        # (scenario engine / fleet controller with REPRO_OBS=on)
+        self.tracer = NULL_TRACER
         self.last_pred: Optional[np.ndarray] = None
         self.envelope = envelope     # arbitrated budget (None = own M)
         self._agents: Optional[List[AimdAgent]] = None
@@ -159,6 +171,7 @@ class WanifyController:
         at monitor scale ([N,N] of `self.sim`); AIMD feedback still
         comes from the capture's snapshot.
         """
+        tr = self.tracer
         conns = self.current_conns()
         # the matrix the snapshot was measured at: consumers scaling
         # predicted BW to a different connection count (the placement
@@ -166,12 +179,14 @@ class WanifyController:
         # point via the paper's BW-grows-linearly-with-conns claim
         self.last_capture_conns = conns
         if capture is None:
-            _, capture = self.monitor.capture(conns)
+            with tr.span("snapshot"):
+                _, capture = self.monitor.capture(conns)
         raw = capture
         if pred is None:
-            pred = self.predictor.predict_matrix(
-                self.sim.N, raw["snapshot_bw"], raw["mem_util"],
-                raw["cpu_load"], raw["retrans"], raw["dist"])
+            with tr.span("predict"):
+                pred = self.predictor.predict_matrix(
+                    self.sim.N, raw["snapshot_bw"], raw["mem_util"],
+                    raw["cpu_load"], raw["retrans"], raw["dist"])
         if self.lifecycle is not None:
             # sanity clamp: the RF may not promise BW beyond what the
             # lifecycle's windowed percentile capacity has ever seen
@@ -191,22 +206,25 @@ class WanifyController:
                         f"({self.n_pods}, {self.n_pods}); slice caps to "
                         f"the controller's pod scale first (the fleet "
                         f"does this via TenantView.extract)")
-        gp = global_optimize(pods, M=M, w_s=skew_w, link_cap=link_cap)
-        if self._agents is None or len(self._agents) != self.n_pods:
-            self._agents = [AimdAgent.from_plan(gp, i)
-                            for i in range(self.n_pods)]
-        else:
-            # fine-tune inside the new global bounds against BW monitored
-            # at the connection matrix actually in force — the capture
-            # above already measured at `conns`, so reuse it instead of
-            # paying a second waterfill + noise draw
-            monitored = raw["snapshot_bw"][:self.n_pods, :self.n_pods]
-            for i, ag in enumerate(self._agents):
-                ag.min_cons, ag.max_cons = gp.min_cons[i], gp.max_cons[i]
-                ag.min_bw, ag.max_bw = gp.min_bw[i], gp.max_bw[i]
-                ag.unit_bw, ag.throttle = gp.pred_bw[i], gp.throttle[i]
-                ag.step(monitored[i])
-        cons = np.stack([ag.cons for ag in self._agents])
+        with tr.span("optimize"):
+            gp = global_optimize(pods, M=M, w_s=skew_w, link_cap=link_cap)
+        with tr.span("aimd"):
+            if self._agents is None or len(self._agents) != self.n_pods:
+                self._agents = [AimdAgent.from_plan(gp, i)
+                                for i in range(self.n_pods)]
+            else:
+                # fine-tune inside the new global bounds against BW
+                # monitored at the connection matrix actually in force —
+                # the capture above already measured at `conns`, so
+                # reuse it instead of paying a second waterfill + noise
+                # draw
+                monitored = raw["snapshot_bw"][:self.n_pods, :self.n_pods]
+                for i, ag in enumerate(self._agents):
+                    ag.min_cons, ag.max_cons = gp.min_cons[i], gp.max_cons[i]
+                    ag.min_bw, ag.max_bw = gp.min_bw[i], gp.max_bw[i]
+                    ag.unit_bw, ag.throttle = gp.pred_bw[i], gp.throttle[i]
+                    ag.step(monitored[i])
+            cons = np.stack([ag.cons for ag in self._agents])
         plan = WanPlan(
             n_pods=self.n_pods,
             conns=tuple(tuple(int(v) for v in row) for row in cons),
@@ -225,12 +243,15 @@ class WanifyController:
             # route selection rides every replan: split each pair's
             # planned connections between the direct link and the best
             # closeness-pruned one-hop relay on the predicted surface
-            self.routed = plan_routes(
-                gp.pred_bw, cons, dc_rel=gp.dc_rel,
-                capture_conns=self.last_capture_conns)
+            with tr.span("route"):
+                self.routed = plan_routes(
+                    gp.pred_bw, cons, dc_rel=gp.dc_rel,
+                    capture_conns=self.last_capture_conns)
             rec["overlay"] = "on"
             rec["relays"] = self.routed.relays
             rec["routed_signature"] = self.routed.signature()
+        self._m_replans.inc()
+        self.metrics.counter("replans", labels={"reason": reason}).inc()
         self.record.append(rec)
         if self.trace_hook is not None:
             self.trace_hook(rec)
@@ -332,8 +353,29 @@ class WanifyController:
         compiled artifact instead of re-lowering."""
         key = (self.plan.signature(),) + tuple(extra_key)
         if key not in self.plan_cache:
-            self.cache_builds += 1
+            self._m_builds.inc()
             self.plan_cache[key] = build(self.plan)
         else:
-            self.cache_hits += 1
+            self._m_hits.inc()
         return self.plan_cache[key]
+
+    # -- back-compat aliases onto the obs registry ---------------------
+    @property
+    def cache_builds(self) -> int:
+        """Plan-cache misses (artifacts lowered); registry-backed."""
+        return int(self._m_builds.value)
+
+    @cache_builds.setter
+    def cache_builds(self, v: int) -> None:
+        """Legacy reset path (tests zero the tally between phases)."""
+        self._m_builds.reset(int(v))
+
+    @property
+    def cache_hits(self) -> int:
+        """Plan-cache reuses; registry-backed."""
+        return int(self._m_hits.value)
+
+    @cache_hits.setter
+    def cache_hits(self, v: int) -> None:
+        """Legacy reset path for the reuse tally."""
+        self._m_hits.reset(int(v))

@@ -44,6 +44,7 @@ from repro.core.predictor import SnapshotPredictor, matrix_from_pairs
 from repro.fleet import arbiter
 from repro.fleet.predictor import BatchedRfPredictor
 from repro.fleet.tenant import TenantView
+from repro.obs.spans import NULL_TRACER, SpanTracer, obs_mode
 from repro.wan.simulator import WanSimulator
 from repro.wan.topology import INTRA_DC_BW
 
@@ -89,10 +90,12 @@ class FleetController:
     """Arbitrate one shared WAN across N concurrent WANify jobs."""
 
     def __init__(self, sim: WanSimulator, predictor: BatchedRfPredictor,
-                 m_total: int = 8, jobs: Tuple[JobSpec, ...] = ()):
+                 m_total: int = 8, jobs: Tuple[JobSpec, ...] = (),
+                 obs: Optional[str] = None):
         """`m_total` is the per-host connection budget the whole fleet
         shares at each DC; `predictor` serves every job's RF inference
-        in one launch per tick."""
+        in one launch per tick. `obs` gates span tracing (repro.obs;
+        None defers to $REPRO_OBS, default off) — passive either way."""
         self.sim = sim
         self.predictor = predictor
         self.m_total = int(m_total)
@@ -100,6 +103,11 @@ class FleetController:
         self.tick_count = 0
         self.events: List[str] = []
         self._planners: List[Tuple[str, Any]] = []
+        self.tracer = NULL_TRACER
+        if obs_mode(obs) == "on":
+            self.tracer = SpanTracer()
+            self.tracer.watch(self.sim.metrics)
+            self.tracer.watch(self.predictor.metrics)
         for spec in jobs:
             self.add_job(spec)
 
@@ -129,6 +137,13 @@ class FleetController:
         ctl = WanifyController(sim=view, predictor=SnapshotPredictor(),
                                n_pods=view.N, cfg=cfg,
                                envelope=envs[spec.name], overlay="off")
+        # the job's internal replan stages (optimize/aimd) show up in
+        # the fleet's span tree; its registry joins the delta watch
+        # under a per-job namespace so jobs don't clobber each other
+        ctl.metrics.namespace = f"job.{spec.name}"
+        ctl.tracer = self.tracer
+        if self.tracer.enabled:
+            self.tracer.watch(ctl.metrics)
         job.controller = ctl
         view.register(ctl.current_conns())
         self.events.append(f"job {spec.name} arrived "
@@ -223,52 +238,61 @@ class FleetController:
         per-job replan inside its envelope -> register new flows ->
         ONE fleet-wide water-fill for credited achieved BW.
         """
+        tr = self.tracer
         self.tick_count += 1
-        if advance:
-            self.sim.advance()
-        envs = self._arbitrate()
+        with tr.span("tick", tick=self.tick_count):
+            if advance:
+                self.sim.advance()
+            with tr.span("arbitrate"):
+                envs = self._arbitrate()
 
-        # capture first, all jobs, against LAST tick's registered flows
-        captures = []
-        for job in self.jobs.values():
-            conns = job.controller.current_conns()
-            X, raw = job.controller.monitor.capture(conns)
-            captures.append((job, X, raw))
-        rows: List[Dict[str, Any]] = []
-        if captures:
-            X_all = np.vstack([X for _, X, _ in captures])
-            vals = self.predictor.predict_rows(X_all)     # ONE launch
-            parts = self.predictor.split_rows(
-                vals, [len(X) for _, X, _ in captures])
-            for (job, _, raw), v in zip(captures, parts):
+            # capture first, all jobs, against LAST tick's registered
+            # flows
+            with tr.span("capture"):
+                captures = []
+                for job in self.jobs.values():
+                    conns = job.controller.current_conns()
+                    X, raw = job.controller.monitor.capture(conns)
+                    captures.append((job, X, raw))
+            rows: List[Dict[str, Any]] = []
+            if captures:
+                with tr.span("predict", delta=True):
+                    X_all = np.vstack([X for _, X, _ in captures])
+                    vals = self.predictor.predict_rows(X_all)  # ONE launch
+                    parts = self.predictor.split_rows(
+                        vals, [len(X) for _, X, _ in captures])
+                with tr.span("replan", delta=True):
+                    for (job, _, raw), v in zip(captures, parts):
+                        P = job.controller.n_pods
+                        pred = matrix_from_pairs(v, P, diag=INTRA_DC_BW)
+                        job.controller.replan(
+                            skew_w=job.skew(), reason="fleet",
+                            step=self.tick_count, capture=raw, pred=pred)
+                        job.view.register(job.controller.current_conns())
+            with tr.span("planners"):
+                self._flush_planners()
+            with tr.span("waterfill", delta=True):
+                achieved = self.achieved()
+            for job in self.jobs.values():
                 P = job.controller.n_pods
-                pred = matrix_from_pairs(v, P, diag=INTRA_DC_BW)
-                job.controller.replan(skew_w=job.skew(), reason="fleet",
-                                      step=self.tick_count,
-                                      capture=raw, pred=pred)
-                job.view.register(job.controller.current_conns())
-        self._flush_planners()
-        achieved = self.achieved()
-        for job in self.jobs.values():
-            P = job.controller.n_pods
-            off = ~np.eye(P, dtype=bool)
-            bw = achieved[job.name]
-            env = envs[job.name]
-            cap_off = env.link_cap[off]
-            rows.append({
-                "name": job.name,
-                "priority": job.priority,
-                "budget": int(env.max_conns),
-                "cap_min": float(cap_off.min()),
-                "plan_sig": job.controller.plan.signature(),
-                "achieved_min": float(bw[off].min()),
-                "achieved_mean": float(bw[off].mean()),
-                "conns_total": int(job.controller.current_conns()[off]
-                                   .sum()),
-            })
-        return {"tick": self.tick_count, "n_jobs": len(self.jobs),
-                "kernel_calls": self.predictor.kernel_calls,
-                "jobs": rows}
+                off = ~np.eye(P, dtype=bool)
+                bw = achieved[job.name]
+                env = envs[job.name]
+                cap_off = env.link_cap[off]
+                rows.append({
+                    "name": job.name,
+                    "priority": job.priority,
+                    "budget": int(env.max_conns),
+                    "cap_min": float(cap_off.min()),
+                    "plan_sig": job.controller.plan.signature(),
+                    "achieved_min": float(bw[off].min()),
+                    "achieved_mean": float(bw[off].mean()),
+                    "conns_total": int(job.controller.current_conns()[off]
+                                       .sum()),
+                })
+            return {"tick": self.tick_count, "n_jobs": len(self.jobs),
+                    "kernel_calls": self.predictor.kernel_calls,
+                    "jobs": rows}
 
     def fused(self):
         """Compile the CURRENT job set into a :class:`repro.fleet.fused.
@@ -279,7 +303,10 @@ class FleetController:
 
         Memoized on the job set / priorities / budget, so repeated
         `run_fused` calls reuse the compiled scan instead of retracing
-        (live AIMD state is read fresh at each run)."""
+        (live AIMD state is read fresh at each run).
+
+        Obs spans cover the SEQUENTIAL tick only: the fused path is one
+        jit program with no per-stage Python boundaries to time."""
         from repro.fleet.fused import FusedFleet
         key = (tuple((j.name, j.spec.dcs, j.priority, j.spec.skew_w)
                      for j in self.jobs.values()),

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forest import RandomForest
+from repro.obs.registry import MetricsRegistry
 
 
 class BatchedRfPredictor:
@@ -31,7 +32,13 @@ class BatchedRfPredictor:
         self.forest = forest
         f, t, l = forest.packed()
         self._packed = (jnp.asarray(f), jnp.asarray(t), jnp.asarray(l))
-        self.kernel_calls = 0
+        # launch accounting on the obs registry; `kernel_calls` stays
+        # readable as a back-compat property
+        self.metrics = MetricsRegistry("predictor")
+        self._m_calls = self.metrics.counter(
+            "kernel_calls", help="batched RF Pallas launches")
+        self._m_rows = self.metrics.counter(
+            "rows_total", help="feature rows predicted")
 
     def predict_rows(self, X: np.ndarray) -> np.ndarray:
         """Predict runtime BW for stacked feature rows [R, 6] -> [R].
@@ -40,10 +47,21 @@ class BatchedRfPredictor:
         predictions are floored at 1 Mbps (BW is positive).
         """
         from repro.kernels import ops
-        self.kernel_calls += 1
+        self._m_calls.inc()
+        self._m_rows.inc(int(np.asarray(X).shape[0]))
         vals = ops.rf_predict(*self._packed, jnp.asarray(X, jnp.float32),
                               depth=self.forest.depth)
         return np.maximum(np.asarray(vals, np.float64), 1.0)
+
+    @property
+    def kernel_calls(self) -> int:
+        """Total Pallas launches (registry-backed back-compat alias)."""
+        return int(self._m_calls.value)
+
+    @kernel_calls.setter
+    def kernel_calls(self, v: int) -> None:
+        """Legacy reset path (tests zero the tally between phases)."""
+        self._m_calls.reset(int(v))
 
     def split_rows(self, vals: np.ndarray,
                    row_counts: Sequence[int]) -> list:

@@ -52,9 +52,10 @@ class FleetEngine:
     """One deterministic run of a :class:`FleetScenarioSpec`."""
 
     def __init__(self, spec: FleetScenarioSpec, seed: int = 0,
-                 forest: Any = None):
+                 forest: Any = None, obs: Optional[str] = None):
         """`forest`: a fitted RandomForest shared by every job's RF
-        inference (defaults to the memoized small demo forest)."""
+        inference (defaults to the memoized small demo forest); `obs`
+        gates span tracing (None defers to $REPRO_OBS, default off)."""
         self.spec = spec
         self.seed = int(seed)
         sim_kw = dict(spec.sim_kwargs)
@@ -63,7 +64,8 @@ class FleetEngine:
         self.sim = WanSimulator(seed=self.seed, **sim_kw)
         self.fleet = FleetController(
             self.sim, BatchedRfPredictor(forest or default_fleet_forest()),
-            m_total=spec.m_total, jobs=spec.jobs)
+            m_total=spec.m_total, jobs=spec.jobs, obs=obs)
+        self.tracer = self.fleet.tracer
         self.step = 0
         self.diurnal: Optional[Tuple[float, int, int]] = None
         self._timeline: Dict[int, List[Timed]] = {}
@@ -122,9 +124,11 @@ class FleetEngine:
 
 
 def run_fleet_scenario(spec: FleetScenarioSpec, seed: int = 0,
-                       forest: Any = None) -> FleetResult:
-    """Build a fresh engine and run the fleet scenario to completion."""
-    return FleetEngine(spec, seed=seed, forest=forest).run()
+                       forest: Any = None,
+                       obs: Optional[str] = None) -> FleetResult:
+    """Build a fresh engine and run the fleet scenario to completion
+    (`obs` gates span tracing; None defers to $REPRO_OBS)."""
+    return FleetEngine(spec, seed=seed, forest=forest, obs=obs).run()
 
 
 # ----------------------------------------------------------------------

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.predictor import assemble_features
 from repro.lifecycle.drift import (DriftConfig, DriftSignal,
                                    EwmaDriftDetector, ResidualStats)
+from repro.obs.registry import MetricsRegistry
 from repro.lifecycle.probes import ProbeConfig, ProbeScheduler
 from repro.lifecycle.refresh import RefreshConfig, refresh_forest
 from repro.lifecycle.window import (SlidingWindow,
@@ -116,12 +117,25 @@ class LifecycleManager:
         self.scheduler = ProbeScheduler(self.n_dcs, self.cfg.probes)
         self.records: List[LifecycleRecord] = []
         self.signals: List[DriftSignal] = []
-        self.refreshes = 0
+        # lifecycle tallies on the obs registry (`refreshes` stays
+        # readable as a back-compat property)
+        self.metrics = MetricsRegistry("lifecycle")
+        self._m_refreshes = self.metrics.counter(
+            "refreshes", help="forest refits swapped in")
+        self._m_signals = self.metrics.counter(
+            "drift_signals", help="drift signals raised")
+        self._m_ticks = self.metrics.counter(
+            "ticks", help="lifecycle iterations run")
         self._last_refresh: Optional[int] = None
         self._drift_pending: Optional[int] = None   # step of open signal
         self._seen_records = 0
 
     # ------------------------------------------------------------------
+    @property
+    def refreshes(self) -> int:
+        """Forest refits swapped in (registry-backed alias)."""
+        return int(self._m_refreshes.value)
+
     def can_refresh(self) -> bool:
         """True when the predictor carries a fitted, swappable forest
         (the SnapshotPredictor ablation has none — the manager then
@@ -163,9 +177,11 @@ class LifecycleManager:
         ewma = self.stats.update(resid[off])
 
         # 2. detect
+        self._m_ticks.inc()
         sig = self.detector.update(resid, step=step)
         if sig is not None:
             self.signals.append(sig)
+            self._m_signals.inc()
         suspicious = self.detector.suspicious()
         z_max = float(self.detector.last_z.max()) if N else 0.0
         consec_max = int(self.detector.consec.max()) if N else 0
@@ -206,7 +222,7 @@ class LifecycleManager:
                                     self.seed_X, self.seed_y,
                                     self.cfg.refresh)
             self.predictor.forest = new_rf       # the atomic swap
-            self.refreshes += 1
+            self._m_refreshes.inc()
             self._last_refresh = step
             self._drift_pending = None
             self.detector.reset()

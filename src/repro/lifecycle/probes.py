@@ -22,6 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.obs.registry import MetricsRegistry
 from repro.wan.monitor import (MONITOR_EVERY_MIN, MONITOR_SECONDS,
                                SNAPSHOT_SECONDS, probe_cost_usd)
 
@@ -53,9 +54,15 @@ class ProbeScheduler:
     def __init__(self, n_dcs: int, cfg: Optional[ProbeConfig] = None):
         self.n_dcs = int(n_dcs)
         self.cfg = cfg or ProbeConfig()
-        self.full_probes = 0
-        self.snapshots = 0
-        self.spend_usd = 0.0
+        # probe tallies + Eq. 1 dollars live on the obs registry;
+        # `full_probes` / `snapshots` / `spend_usd` remain as properties
+        self.metrics = MetricsRegistry("probes")
+        self._m_full = self.metrics.counter(
+            "full_probes", help="full >=20 s runtime probes fired")
+        self._m_snaps = self.metrics.counter(
+            "snapshots", help="1-second snapshot captures charged")
+        self._m_usd = self.metrics.counter(
+            "spend_usd", help="cumulative Eq. 1 monitoring dollars")
         self._last_full: Optional[int] = None
 
     def want_full(self, step: int, suspicious: bool) -> bool:
@@ -72,8 +79,8 @@ class ProbeScheduler:
     def charge_full(self, step: int) -> float:
         """Account one full probe fired at `step`; returns its $."""
         cost = probe_cost_usd(self.cfg.probe_seconds, self.n_dcs)
-        self.full_probes += 1
-        self.spend_usd += cost
+        self._m_full.inc()
+        self._m_usd.inc(cost)
         self._last_full = int(step)
         return cost
 
@@ -82,6 +89,22 @@ class ProbeScheduler:
         replan); returns the $ added."""
         cost = count * probe_cost_usd(self.cfg.snapshot_seconds,
                                       self.n_dcs)
-        self.snapshots += count
-        self.spend_usd += cost
+        self._m_snaps.inc(count)
+        self._m_usd.inc(cost)
         return cost
+
+    # -- back-compat aliases onto the obs registry ---------------------
+    @property
+    def full_probes(self) -> int:
+        """Full probes fired (registry-backed)."""
+        return int(self._m_full.value)
+
+    @property
+    def snapshots(self) -> int:
+        """Snapshot captures charged (registry-backed)."""
+        return int(self._m_snaps.value)
+
+    @property
+    def spend_usd(self) -> float:
+        """Cumulative Eq. 1 dollars (registry-backed)."""
+        return float(self._m_usd.value)

@@ -33,6 +33,7 @@ import numpy as np
 from repro.control import ControllerConfig, WanifyController
 from repro.core.predictor import SnapshotPredictor
 from repro.lifecycle.manager import LifecycleManager, lifecycle_mode
+from repro.obs.spans import NULL_TRACER, SpanTracer, obs_mode
 from repro.scenarios.events import Timed
 from repro.scenarios.trace import (ScenarioResult, ScenarioTrace, StepTrace,
                                    sig_hash)
@@ -59,7 +60,7 @@ class ScenarioEngine:
 
     def __init__(self, spec: ScenarioSpec, seed: int = 0,
                  predictor: Any = None, overlay: Optional[str] = None,
-                 lifecycle: Any = None):
+                 lifecycle: Any = None, obs: Optional[str] = None):
         self.spec = spec
         self.seed = int(seed)
         sim_kw = dict(spec.sim_kwargs)
@@ -87,6 +88,20 @@ class ScenarioEngine:
             sim=self.sim, predictor=pred_obj,
             n_pods=spec.n_pods, cfg=cfg, overlay=overlay,
             lifecycle=self.lifecycle)
+        # `obs` gates span tracing (repro.obs; None defers to
+        # $REPRO_OBS, default off = the shared no-op tracer). Spans are
+        # PASSIVE: they wrap the stages the loop already runs, in the
+        # order it already runs them, so traces replay byte-identical
+        # either way (pinned in tests/test_obs.py).
+        self.tracer = NULL_TRACER
+        if obs_mode(obs) == "on":
+            self.tracer = SpanTracer()
+            self.tracer.watch(self.sim.metrics)
+            self.tracer.watch(self.controller.metrics)
+            if self.lifecycle is not None:
+                self.tracer.watch(self.lifecycle.metrics)
+                self.tracer.watch(self.lifecycle.scheduler.metrics)
+            self.controller.tracer = self.tracer
         self.step = 0
         # a per-step tap for ride-along harnesses (repro.placement):
         # called as step_hook(engine, step_trace_row) after each step's
@@ -172,45 +187,51 @@ class ScenarioEngine:
 
     def run(self) -> ScenarioResult:
         """Drive the timeline to completion and return the trace."""
-        ctl, sim = self.controller, self.sim
+        ctl, sim, tr = self.controller, self.sim, self.tracer
         trace = ScenarioTrace(self.spec.name, self.seed)
         seen_records = len(ctl.record)
         # lower the initial plan once (the consumer's first compile)
         ctl.compiled((self.spec.name,), lambda p: p.signature())
         for k in range(self.spec.steps):
             self.step = k
-            applied = tuple(t.event.describe()
-                            for t in self._timeline.get(k, ()))
-            for t in self._timeline.get(k, ()):
-                t.event.apply(self)
-            self._advance_scripted()
-            sim.advance()
+            with tr.span("events"):
+                applied = tuple(t.event.describe()
+                                for t in self._timeline.get(k, ()))
+                for t in self._timeline.get(k, ()):
+                    t.event.apply(self)
+                self._advance_scripted()
+                sim.advance()
 
-            conns = self._full_conns()
-            routing = ctl.current_routing()
-            if routing is None:
-                achieved = sim.waterfill(conns)
-            else:
-                # overlay in force: execute the routed lowering — the
-                # end-to-end credit on a relayed pair is what the ring
-                # consumer observes
-                achieved = sim.waterfill_routed(*routing)
-            dt = self._step_time(achieved)
-            ctl.observe_step_time(dt, step=k)
-            ctl.maybe_replan(k, skew_w=self.skew_for_pods())
+            with tr.span("waterfill", delta=True):
+                conns = self._full_conns()
+                routing = ctl.current_routing()
+                if routing is None:
+                    achieved = sim.waterfill(conns)
+                else:
+                    # overlay in force: execute the routed lowering —
+                    # the end-to-end credit on a relayed pair is what
+                    # the ring consumer observes
+                    achieved = sim.waterfill_routed(*routing)
+            with tr.span("control", delta=True):
+                dt = self._step_time(achieved)
+                ctl.observe_step_time(dt, step=k)
+                ctl.maybe_replan(k, skew_w=self.skew_for_pods())
             # every plan in force goes through the compile cache: a
             # signature seen before is a hit, not a rebuild
-            ctl.compiled((self.spec.name,), lambda p: p.signature())
+            with tr.span("lower", delta=True):
+                ctl.compiled((self.spec.name,), lambda p: p.signature())
 
             # sampled at the same matrix as `achieved`, so in a quiet
             # scenario monitored == achieved exactly, replan step or not
-            monitored = ctl.monitor.measure(conns)
+            with tr.span("measure"):
+                monitored = ctl.monitor.measure(conns)
             if self.lifecycle is not None:
                 # lifecycle tick before the trace row is cut, so a
                 # drift-triggered refresh replan lands in this step's
                 # `replans` (and its prediction in this step's columns)
-                self.lifecycle.tick(k, ctl, sim, conns, achieved,
-                                    monitored)
+                with tr.span("lifecycle", delta=True):
+                    self.lifecycle.tick(k, ctl, sim, conns, achieved,
+                                        monitored)
             P = ctl.n_pods
             off = ~np.eye(P, dtype=bool)
             pred = ctl.last_pred[:P, :P]
@@ -245,9 +266,12 @@ class ScenarioEngine:
 def run_scenario(spec: ScenarioSpec, seed: int = 0,
                  predictor: Any = None,
                  overlay: Optional[str] = None,
-                 lifecycle: Any = None) -> ScenarioResult:
+                 lifecycle: Any = None,
+                 obs: Optional[str] = None) -> ScenarioResult:
     """Build a fresh engine and run the scenario to completion
     (`overlay` gates relay routing, `lifecycle` the predictor
-    lifecycle; None defers to $REPRO_OVERLAY / $REPRO_LIFECYCLE)."""
+    lifecycle, `obs` span tracing; None defers to $REPRO_OVERLAY /
+    $REPRO_LIFECYCLE / $REPRO_OBS)."""
     return ScenarioEngine(spec, seed=seed, predictor=predictor,
-                          overlay=overlay, lifecycle=lifecycle).run()
+                          overlay=overlay, lifecycle=lifecycle,
+                          obs=obs).run()

@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.registry import MetricsRegistry
 from repro.wan import topology as topo
 
 
@@ -112,14 +113,51 @@ class WanSimulator:
         self._link_factor = np.ones((self.N, self.N))  # scripted events
         self.modulation = 1.0                      # scripted diurnal cycle
         # convergence accounting of the most recent / all fills (the
-        # historical loop capped silently at 8*N*N; now surfaced)
-        self.last_fill_iters = 0
-        self.fill_calls = 0
+        # historical loop capped silently at 8*N*N; now surfaced) —
+        # kept on the obs registry, with `fill_calls` /
+        # `last_fill_iters` as back-compat property aliases
+        self.metrics = MetricsRegistry("sim")
+        self._m_fill_calls = self.metrics.counter(
+            "fill_calls", help="water-fill invocations")
+        self._m_last_iters = self.metrics.gauge(
+            "last_fill_iters", help="iterations of the most recent fill")
+        self._m_iters_total = self.metrics.counter(
+            "fill_iters_total", help="cumulative fill iterations")
+        self._m_iters_hist = self.metrics.histogram(
+            "fill_iters", buckets=(4, 8, 16, 32, 64, 128, 256, 512),
+            help="per-fill iteration distribution")
 
     @property
     def fill_iter_cap(self) -> int:
         """The fill's iteration bound (divergence past this raises)."""
         return 8 * self.N * self.N
+
+    # -- back-compat aliases onto the obs registry ---------------------
+    def _note_fill(self, iters: int) -> None:
+        self._m_fill_calls.inc()
+        self._m_last_iters.set(int(iters))
+        self._m_iters_total.inc(int(iters))
+        self._m_iters_hist.observe(int(iters))
+
+    @property
+    def fill_calls(self) -> int:
+        """Total water-fill invocations (registry-backed)."""
+        return int(self._m_fill_calls.value)
+
+    @fill_calls.setter
+    def fill_calls(self, v: int) -> None:
+        """Legacy reset path (tests zero the tally between phases)."""
+        self._m_fill_calls.reset(int(v))
+
+    @property
+    def last_fill_iters(self) -> int:
+        """Iterations of the most recent fill (registry-backed)."""
+        return int(self._m_last_iters.value)
+
+    @last_fill_iters.setter
+    def last_fill_iters(self, v: int) -> None:
+        """Legacy reset path for the iteration gauge."""
+        self._m_last_iters.set(int(v))
 
     def _rebuild_base(self) -> None:
         self.base = topo.bw_single_matrix(self.regions)
@@ -383,8 +421,7 @@ class WanSimulator:
             from repro.kernels import waterfill as wfk
             rate, iters, ok = wfk.fill_rates(c, single, egress, ingress,
                                              w, path_cap)
-            self.last_fill_iters = int(iters)
-            self.fill_calls += 1
+            self._note_fill(int(iters))
             if not bool(ok):
                 raise WaterfillDivergence(
                     f"jax water-fill hit the {self.fill_iter_cap}-"
@@ -410,8 +447,7 @@ class WanSimulator:
             if frozen.all():
                 break
             if iters >= self.fill_iter_cap:
-                self.last_fill_iters = iters
-                self.fill_calls += 1
+                self._note_fill(iters)
                 raise WaterfillDivergence(
                     f"water-fill hit the {self.fill_iter_cap}-iteration "
                     f"bound with {int((~frozen).sum())} unfrozen pairs "
@@ -447,8 +483,7 @@ class WanSimulator:
             if not hit.any() and inc == 0.0:
                 break
             frozen |= hit
-        self.last_fill_iters = iters
-        self.fill_calls += 1
+        self._note_fill(iters)
         return rate
 
     # ------------------------------------------------------------------
