@@ -1,0 +1,68 @@
+"""Fault-plane benchmark — the chaos harness as one tracked artifact.
+
+Each row in `BENCH_faults.json` is one (chaos scenario, mode) run from
+`repro.faults.harness`: the SAME scripted fault timeline executed with
+the graceful degradation ladder (``mode="ladder"``, REPRO_FAULTS=on
+semantics) and as the naive-crash ablation (``mode="naive"``, the off
+gate with fault events scripted). A final ``kind="summary"`` row
+carries the headline comparisons CI pins:
+
+  * ``ladder_crashes == 0`` — the ladder survives the whole library
+    with zero uncaught exceptions;
+  * ``naive_crashes > 0`` — the ablation actually dies (a chaos suite
+    nothing crashes under measures nothing);
+  * mean MTTR (fault -> 90%-floor recovery, the obs responsiveness
+    SLE) lower for the ladder than naive, and the ladder's worst
+    degraded-mode min-BW floor above an absolute threshold while the
+    naive ablation's is 0 (a crashed run makes no progress).
+
+``--smoke`` runs a 3-scenario subset (one guaranteed naive crash, one
+degraded-mode scenario, the fleet quarantine) so CI stays fast; the
+committed full-size artifact is what the threshold guards gate.
+
+Run:  PYTHONPATH=src python benchmarks/faults_bench.py
+          [--seed N] [--out FILE] [--json [PATH]] [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+try:
+    from benchmarks.common import bench_parser, emit
+except ImportError:            # run as a script: sys.path[0] is benchmarks/
+    from common import bench_parser, emit
+from repro.faults.harness import chaos_report
+
+SMOKE_SCENARIOS = ["solver_flake", "monitor_freeze", "fleet_blackout"]
+
+
+def bench_faults(seed: int = 3, smoke: bool = False):
+    """Two rows per chaos scenario (ladder vs naive) + a summary row."""
+    names = SMOKE_SCENARIOS if smoke else None
+    t0 = time.time()
+    rep = chaos_report(names=names, seed=seed)
+    elapsed = time.time() - t0
+    rows = []
+    for r in rep["runs"]:
+        rows.append(dict(kind="chaos", **r))
+    rows.append({
+        "kind": "summary",
+        "seed": seed,
+        "smoke": bool(smoke),
+        "elapsed_s": round(elapsed, 3),
+        **rep["summary"],
+    })
+    return rows
+
+
+def main() -> None:
+    """CLI entry point (see module docstring for the flags)."""
+    ap = bench_parser(__doc__.splitlines()[0], name="faults",
+                      default_seed=3)
+    args = ap.parse_args()
+    rows = bench_faults(seed=args.seed, smoke=args.smoke)
+    emit("faults", rows, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -73,6 +73,26 @@ class ControllerConfig:
     advance_sim: bool = True         # advance link fluctuation on the
     #                                  periodic trigger (simulated time)
 
+    def __post_init__(self) -> None:
+        """Fail loudly at construction — a bad knob here otherwise
+        misbehaves ticks later (replan_every=0 divides by zero, a
+        non-positive straggler factor replans every single step)."""
+        if self.max_conns < 1:
+            raise ValueError(f"max_conns must be >= 1, got "
+                             f"{self.max_conns}")
+        if self.replan_every < 1:
+            raise ValueError(f"replan_every must be >= 1, got "
+                             f"{self.replan_every}")
+        if self.straggler_factor <= 0:
+            raise ValueError(f"straggler_factor must be > 0, got "
+                             f"{self.straggler_factor}")
+        if self.straggler_cooldown < 0:
+            raise ValueError(f"straggler_cooldown must be >= 0, got "
+                             f"{self.straggler_cooldown}")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(f"ewma_alpha must be in (0, 1], got "
+                             f"{self.ewma_alpha}")
+
 
 class WanifyController:
     """One instance per workload (a Trainer, a serving Engine, a
@@ -120,6 +140,11 @@ class WanifyController:
         self.tracer = NULL_TRACER
         self.last_pred: Optional[np.ndarray] = None
         self.envelope = envelope     # arbitrated budget (None = own M)
+        # fault plane (repro.faults): when an engine attaches one,
+        # replan captures/predictions route through its degradation
+        # ladder; None (default) runs no fault code at all
+        self.faults: Optional[Any] = None
+        self._prev_plan: Optional[WanPlan] = None
         self._agents: Optional[List[AimdAgent]] = None
         self._ewma: Optional[float] = None
         self._last_straggler: Optional[int] = None
@@ -178,15 +203,32 @@ class WanifyController:
         # planner's achievable-BW pricing) scale from this operating
         # point via the paper's BW-grows-linearly-with-conns claim
         self.last_capture_conns = conns
+        pred_override = None
         if capture is None:
             with tr.span("snapshot"):
-                _, capture = self.monitor.capture(conns)
+                if self.faults is not None:
+                    # the fault boundary: injected probe faults /
+                    # monitor outages surface here; graceful mode
+                    # climbs the retry/staleness ladder and may hand
+                    # back a prediction override (the SnapshotPredictor
+                    # rung) when the capture is too stale to trust
+                    capture, pred_override = self.faults.captured(
+                        self.monitor, conns)
+                else:
+                    _, capture = self.monitor.capture(conns)
         raw = capture
         if pred is None:
-            with tr.span("predict"):
-                pred = self.predictor.predict_matrix(
-                    self.sim.N, raw["snapshot_bw"], raw["mem_util"],
-                    raw["cpu_load"], raw["retrans"], raw["dist"])
+            if pred_override is not None:
+                pred = pred_override
+            else:
+                with tr.span("predict"):
+                    pred = self.predictor.predict_matrix(
+                        self.sim.N, raw["snapshot_bw"], raw["mem_util"],
+                        raw["cpu_load"], raw["retrans"], raw["dist"])
+            if self.faults is not None:
+                # inject any scripted predictor fault, then (graceful)
+                # quarantine poisoned rows before they reach the solver
+                pred = self.faults.predicted(pred, raw["snapshot_bw"])
         if self.lifecycle is not None:
             # sanity clamp: the RF may not promise BW beyond what the
             # lifecycle's windowed percentile capacity has ever seen
@@ -232,6 +274,7 @@ class WanifyController:
                           for row in gp.pred_bw),
             compress_bits=WanPlan.from_global(gp).compress_bits,
         )
+        self._prev_plan = getattr(self, "plan", None)
         self.plan = plan
         self.last_pred = pred
         off = ~np.eye(self.n_pods, dtype=bool)
@@ -270,6 +313,36 @@ class WanifyController:
         P = self.n_pods
         direct[:P, :P] = np.asarray(self.routed.direct, np.float64)
         return direct, self.routed.relays
+
+    def rollback_plan(self, step: Optional[int] = None
+                      ) -> Optional[WanPlan]:
+        """Restore the last-known-good plan (fault-plane rung 5).
+
+        Called by an engine when executing the CURRENT plan failed
+        downstream (a diverging water-fill): re-adopt the previous
+        plan and reseat every AIMD agent's connection vector on it, so
+        the next step runs a configuration that is known to have
+        executed. The restored plan's signature is already in the plan
+        cache, so the consumer's re-lower is a cache hit, not a
+        rebuild. Returns the restored plan, or None when there is no
+        previous plan to roll back to (the bad plan stays in force)."""
+        prev = self._prev_plan
+        if prev is None:
+            return None
+        self.plan = prev
+        self._prev_plan = None       # don't ping-pong between two plans
+        if self._agents is not None and len(prev.conns) == self.n_pods:
+            for i, ag in enumerate(self._agents):
+                ag.cons = np.array(prev.conns[i], np.int64)
+        self.events.append(f"rolled back to last-known-good plan at "
+                           f"step {step}")
+        rec = {"reason": "rollback", "step": step,
+               "signature": prev.signature(), "n_pods": self.n_pods,
+               "pred_min": 0.0, "pred_mean": 0.0}
+        self.record.append(rec)
+        if self.trace_hook is not None:
+            self.trace_hook(rec)
+        return prev
 
     # ------------------------------------------------------------------
     # Triggers

@@ -24,7 +24,7 @@ fleet-wide water-fill keeps the per-tick cost sublinear in job count.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,7 +74,8 @@ def link_shares(presence: np.ndarray, weights: np.ndarray,
 
 
 def arbitrate(jobs: Sequence[Tuple[str, Sequence[int], float]],
-              n_dcs: int, m_total: int, cap_est: np.ndarray
+              n_dcs: int, m_total: int, cap_est: np.ndarray,
+              reachable: Optional[np.ndarray] = None
               ) -> Dict[str, BudgetEnvelope]:
     """Compute one :class:`BudgetEnvelope` per job.
 
@@ -82,6 +83,13 @@ def arbitrate(jobs: Sequence[Tuple[str, Sequence[int], float]],
     the fleet's per-link capacity estimate at mesh scale. Each
     envelope's ``link_cap`` is returned at MESH scale — the fleet
     slices it to the job's pod scale before handing it over.
+
+    ``reachable`` (fault plane, optional) is a bool [N,N] mask of live
+    links: a DC that can reach no other DC is QUARANTINED — it stops
+    counting toward budget splits (jobs that avoided the dead DC grow
+    into the freed share) and every unreachable pair's cap is zeroed
+    for the jobs spanning it (their envelopes shrink; the §3.2.2
+    throttle then steers their connections onto surviving links).
     """
     J = len(jobs)
     if J == 0:
@@ -91,8 +99,20 @@ def arbitrate(jobs: Sequence[Tuple[str, Sequence[int], float]],
     for j, (_, dcs, prio) in enumerate(jobs):
         presence[j, list(dcs)] = True
         weights[j] = max(float(prio), 1e-9)
-    budgets = connection_budgets(presence, weights, m_total)
-    caps = link_shares(presence, weights, cap_est)
+    effective = presence
+    if reachable is not None:
+        off = ~np.eye(n_dcs, dtype=bool)
+        live_dc = (np.asarray(reachable, bool) & off).any(axis=1)
+        effective = presence & live_dc[None, :]
+    budgets = connection_budgets(effective, weights, m_total)
+    caps = link_shares(effective, weights, cap_est)
+    if reachable is not None:
+        dead_pair = ~np.asarray(reachable, bool)
+        for j in range(J):
+            # zero the cap on every dead pair the job spans — including
+            # sole-tenant pairs, which link_shares leaves uncapped
+            on_pair = np.outer(presence[j], presence[j])
+            caps[j][on_pair & dead_pair] = 0.0
     return {name: BudgetEnvelope(max_conns=int(budgets[j]),
                                  link_cap=caps[j])
             for j, (name, _, _) in enumerate(jobs)}

@@ -41,11 +41,12 @@ import numpy as np
 
 from repro.control import ControllerConfig, WanifyController
 from repro.core.predictor import SnapshotPredictor, matrix_from_pairs
+from repro.faults.plane import FaultPlane, faults_mode
 from repro.fleet import arbiter
 from repro.fleet.predictor import BatchedRfPredictor
 from repro.fleet.tenant import TenantView
 from repro.obs.spans import NULL_TRACER, SpanTracer, obs_mode
-from repro.wan.simulator import WanSimulator
+from repro.wan.simulator import WanSimulator, WaterfillDivergence
 from repro.wan.topology import INTRA_DC_BW
 
 
@@ -91,11 +92,16 @@ class FleetController:
 
     def __init__(self, sim: WanSimulator, predictor: BatchedRfPredictor,
                  m_total: int = 8, jobs: Tuple[JobSpec, ...] = (),
-                 obs: Optional[str] = None):
+                 obs: Optional[str] = None, faults: Any = None):
         """`m_total` is the per-host connection budget the whole fleet
         shares at each DC; `predictor` serves every job's RF inference
         in one launch per tick. `obs` gates span tracing (repro.obs;
-        None defers to $REPRO_OBS, default off) — passive either way."""
+        None defers to $REPRO_OBS, default off) — passive either way.
+        `faults` gates the fault plane (repro.faults; a FaultPlane is
+        used as-is, else the mode resolves via $REPRO_FAULTS): when
+        graceful, blacked-out DCs are quarantined in arbitration,
+        poisoned predictions sanitized, and water-fill divergence
+        recovered by rolling every job back to its last-good plan."""
         self.sim = sim
         self.predictor = predictor
         self.m_total = int(m_total)
@@ -108,6 +114,13 @@ class FleetController:
             self.tracer = SpanTracer()
             self.tracer.watch(self.sim.metrics)
             self.tracer.watch(self.predictor.metrics)
+        self.faults: Optional[FaultPlane] = None
+        if isinstance(faults, FaultPlane):
+            self.faults = faults
+        elif faults_mode(faults) == "on":
+            self.faults = FaultPlane(self.sim.N, graceful=True)
+        if self.faults is not None and self.tracer.enabled:
+            self.tracer.watch(self.faults.metrics)
         for spec in jobs:
             self.add_job(spec)
 
@@ -217,8 +230,15 @@ class FleetController:
         """Compute and install one envelope per job (slice-scale cap)."""
         triples = [(j.name, j.spec.dcs, j.priority)
                    for j in self.jobs.values()]
+        reach = None
+        if self.faults is not None and self.faults.graceful:
+            # DC quarantine: dead DCs stop counting toward budget
+            # splits and dead pairs' caps go to zero, so survivors
+            # grow into the freed share while touched jobs shrink
+            reach = self.faults.reachable_mask()
         envs = arbiter.arbitrate(triples, self.sim.N, self.m_total,
-                                 self.capacity_estimate())
+                                 self.capacity_estimate(),
+                                 reachable=reach)
         sliced = {}
         for job in self.jobs.values():
             env = envs[job.name]
@@ -265,6 +285,12 @@ class FleetController:
                     for (job, _, raw), v in zip(captures, parts):
                         P = job.controller.n_pods
                         pred = matrix_from_pairs(v, P, diag=INTRA_DC_BW)
+                        if self.faults is not None and self.faults.graceful:
+                            # quarantine poisoned rows before the job's
+                            # solver sees them (raw is at slice scale —
+                            # the job's monitor wraps its TenantView)
+                            pred = self.faults.sanitize_matrix(
+                                pred, raw["snapshot_bw"])
                         job.controller.replan(
                             skew_w=job.skew(), reason="fleet",
                             step=self.tick_count, capture=raw, pred=pred)
@@ -272,7 +298,14 @@ class FleetController:
             with tr.span("planners"):
                 self._flush_planners()
             with tr.span("waterfill", delta=True):
-                achieved = self.achieved()
+                try:
+                    if self.faults is not None \
+                            and self.faults.solver_failing(self.faults.step):
+                        raise WaterfillDivergence(
+                            "injected water-fill divergence (SolverFault)")
+                    achieved = self.achieved()
+                except WaterfillDivergence as exc:
+                    achieved = self._recover_divergence(exc)
             for job in self.jobs.values():
                 P = job.controller.n_pods
                 off = ~np.eye(P, dtype=bool)
@@ -293,6 +326,29 @@ class FleetController:
             return {"tick": self.tick_count, "n_jobs": len(self.jobs),
                     "kernel_calls": self.predictor.kernel_calls,
                     "jobs": rows}
+
+    def _recover_divergence(self, exc: WaterfillDivergence
+                            ) -> Dict[str, np.ndarray]:
+        """Fleet-wide water-fill divergence: graceful mode rolls EVERY
+        job back to its last-known-good plan (the registered flows a
+        previous tick is known to have filled) and retries the fill
+        once; without a graceful plane the divergence propagates with
+        tick context attached."""
+        fp = self.faults
+        if fp is None or not fp.graceful:
+            raise WaterfillDivergence(
+                f"{exc} (fleet tick {self.tick_count})") from exc
+        with self.tracer.span("recover"):
+            fp.note_rollback()
+            for job in self.jobs.values():
+                job.controller.rollback_plan(step=self.tick_count)
+                job.view.register(job.controller.current_conns())
+            try:
+                return self.achieved()
+            except WaterfillDivergence as exc2:
+                raise WaterfillDivergence(
+                    f"{exc2} (fleet tick {self.tick_count}, after "
+                    f"last-known-good rollback)") from exc2
 
     def fused(self):
         """Compile the CURRENT job set into a :class:`repro.fleet.fused.

@@ -507,8 +507,11 @@ class FusedFleet:
         outs = jax.tree_util.tree_map(np.asarray, outs)
         if not outs["converged"].all():
             from repro.wan.simulator import WaterfillDivergence
+            conv = np.asarray(outs["converged"]).reshape(-1)
+            bad = int(np.argmax(~conv))
             raise WaterfillDivergence(
-                "a fused-tick water-fill hit its iteration bound")
+                f"a fused-tick water-fill hit its iteration bound at "
+                f"tick {bad + 1} of {len(conv)}")
         self._sync_back(np.asarray(cons), np.asarray(target), outs)
         return self._records(steps, outs)
 

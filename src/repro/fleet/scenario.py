@@ -17,6 +17,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.faults.events import FLEET_FAULT_EVENTS, FaultEvent
+from repro.faults.plane import FaultPlane, faults_mode
 from repro.fleet.controller import FleetController, JobSpec
 from repro.fleet.predictor import BatchedRfPredictor, default_fleet_forest
 from repro.fleet.trace import FleetResult, FleetTrace, tick_to_step
@@ -30,9 +32,12 @@ QUIET = dict(fluct_sigma=0.0, snapshot_sigma=0.0, runtime_sigma=0.0)
 # Events a fleet timeline may carry. Single-job workload events
 # (Rescale, SkewRamp, Straggler, ProviderShift) target the single-job
 # engine's synthetic workload / controller and would silently no-op or
-# crash here, so they are rejected at spec validation instead.
+# crash here, so they are rejected at spec validation instead. Of the
+# fault events, only the reachability ones are job-agnostic WAN state;
+# the control-plane faults (ProbeTimeout, MonitorOutage, ...) target
+# the single-job capture path and stay rejected.
 FLEET_EVENTS = (LinkDegrade, LinkRestore, CrossTraffic, DiurnalCycle,
-                JobArrive, JobDepart, PriorityShift)
+                JobArrive, JobDepart, PriorityShift) + FLEET_FAULT_EVENTS
 
 
 @dataclass
@@ -52,20 +57,37 @@ class FleetEngine:
     """One deterministic run of a :class:`FleetScenarioSpec`."""
 
     def __init__(self, spec: FleetScenarioSpec, seed: int = 0,
-                 forest: Any = None, obs: Optional[str] = None):
+                 forest: Any = None, obs: Optional[str] = None,
+                 faults: Any = None):
         """`forest`: a fitted RandomForest shared by every job's RF
         inference (defaults to the memoized small demo forest); `obs`
-        gates span tracing (None defers to $REPRO_OBS, default off)."""
+        gates span tracing (None defers to $REPRO_OBS, default off);
+        `faults` gates the fault plane (a FaultPlane is used as-is,
+        else $REPRO_FAULTS — "on" = graceful; a timeline scripting
+        fault events under "off" gets the ungraceful naive ablation)."""
         self.spec = spec
         self.seed = int(seed)
         sim_kw = dict(spec.sim_kwargs)
         if spec.regions is not None:
             sim_kw.setdefault("regions", list(spec.regions))
         self.sim = WanSimulator(seed=self.seed, **sim_kw)
+        if not isinstance(faults, FaultPlane):
+            mode = faults_mode(faults)
+            if mode == "on" or any(isinstance(t.event, FaultEvent)
+                                   for t in spec.events):
+                faults = FaultPlane(self.sim.N, graceful=(mode == "on"),
+                                    seed=self.seed)
+            else:
+                faults = None
         self.fleet = FleetController(
             self.sim, BatchedRfPredictor(forest or default_fleet_forest()),
-            m_total=spec.m_total, jobs=spec.jobs, obs=obs)
+            m_total=spec.m_total, jobs=spec.jobs, obs=obs, faults=faults)
+        self.faults = self.fleet.faults
         self.tracer = self.fleet.tracer
+        # a per-tick tap for harnesses: called as
+        # step_hook(engine, fleet_step_trace_row) after each row is
+        # appended; it must not mutate fleet/simulator state
+        self.step_hook: Optional[Callable] = None
         self.step = 0
         self.diurnal: Optional[Tuple[float, int, int]] = None
         self._timeline: Dict[int, List[Timed]] = {}
@@ -88,6 +110,11 @@ class FleetEngine:
         """Resolve a (region, region) pair to shared-mesh indices."""
         a, b = pair
         return self.sim.regions.index(a), self.sim.regions.index(b)
+
+    def dc(self, region: str) -> int:
+        """Resolve one region name to its shared-mesh index (fault
+        events target single DCs)."""
+        return self.sim.regions.index(region)
 
     def add_job(self, spec: JobSpec) -> None:
         """`JobArrive` target."""
@@ -113,6 +140,8 @@ class FleetEngine:
         trace = FleetTrace(self.spec.name, self.seed)
         for k in range(self.spec.steps):
             self.step = k
+            if self.faults is not None:
+                self.faults.step = k     # fault windows key on loop time
             due = self._timeline.get(k, ())
             applied = tuple(t.event.describe() for t in due)
             for t in due:
@@ -120,15 +149,20 @@ class FleetEngine:
             self._advance_scripted()
             record = self.fleet.tick()
             trace.steps.append(tick_to_step(record, events=applied))
+            if self.step_hook is not None:
+                self.step_hook(self, trace.steps[-1])
         return FleetResult(trace=trace)
 
 
 def run_fleet_scenario(spec: FleetScenarioSpec, seed: int = 0,
                        forest: Any = None,
-                       obs: Optional[str] = None) -> FleetResult:
+                       obs: Optional[str] = None,
+                       faults: Any = None) -> FleetResult:
     """Build a fresh engine and run the fleet scenario to completion
-    (`obs` gates span tracing; None defers to $REPRO_OBS)."""
-    return FleetEngine(spec, seed=seed, forest=forest, obs=obs).run()
+    (`obs` gates span tracing, `faults` the fault plane; None defers
+    to $REPRO_OBS / $REPRO_FAULTS)."""
+    return FleetEngine(spec, seed=seed, forest=forest, obs=obs,
+                       faults=faults).run()
 
 
 # ----------------------------------------------------------------------

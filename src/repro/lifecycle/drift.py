@@ -71,6 +71,10 @@ class EwmaDriftDetector:
         self.shape = tuple(shape)
         self.cfg = cfg or DriftConfig()
         self.reset()
+        # cumulative across resets: poisoned entries seen and skipped
+        # (a NaN/inf residual must never touch the EWMA baselines — one
+        # NaN would otherwise corrupt mean/var permanently)
+        self.nan_skipped = 0
 
     def reset(self) -> None:
         """Forget all baselines and streaks (post-refresh re-baseline:
@@ -100,7 +104,16 @@ class EwmaDriftDetector:
         alarm ticks (every tick a streak is >= K until reset), else
         None."""
         r = np.asarray(resid, np.float64).reshape(self.shape)
-        everywhere = np.ones(self.shape, bool)
+        # quarantine poisoned entries: a single NaN/inf residual (a
+        # lost probe, a dead link's 0/0) would otherwise corrupt the
+        # EWMA mean/var PERMANENTLY. Skip-and-count: poisoned entries
+        # never touch the baselines and standardize to z = 0 for the
+        # tick (a poisoned tick is not evidence of drift).
+        finite = np.isfinite(r)
+        if not finite.all():
+            self.nan_skipped += int((~finite).sum())
+            fill = self.mean if self.ticks else np.zeros(self.shape)
+            r = np.where(finite, r, fill)
         if self.ticks == 0:
             # seed the baseline at the first sample so constant streams
             # standardize to exactly z = 0 forever
@@ -110,7 +123,7 @@ class EwmaDriftDetector:
             self.last_z = np.zeros(self.shape)
             return None
         if self.ticks < self.cfg.warmup:
-            self._baseline_update(r, everywhere)
+            self._baseline_update(r, finite)
             self.ticks += 1
             self.last_z = np.zeros(self.shape)
             return None
@@ -120,7 +133,8 @@ class EwmaDriftDetector:
         self.consec = np.where(over, self.consec + 1, 0)
         # learn only from calm pairs: a suspicious pair's baseline is
         # frozen so sustained drift cannot talk its way into the mean
-        self._baseline_update(r, ~over)
+        # (and poisoned entries stay out of it entirely)
+        self._baseline_update(r, ~over & finite)
         self.ticks += 1
         self.last_z = z
         tripped = self.consec >= self.cfg.k_consecutive
@@ -145,9 +159,14 @@ class ResidualStats:
 
     def update(self, resid: np.ndarray) -> float:
         """Feed one tick's residual matrix/vector; returns the EWMA of
-        its mean absolute value."""
-        m = float(np.mean(np.abs(resid)))
-        self.value = m if self.value is None else \
-            (1 - self.alpha) * self.value + self.alpha * m
-        self.history.append(self.value)
-        return self.value
+        its mean absolute value. Non-finite entries (poisoned probes)
+        are excluded from the mean — an all-poisoned tick repeats the
+        previous value."""
+        r = np.abs(np.asarray(resid, np.float64))
+        finite = np.isfinite(r)
+        if finite.any():
+            m = float(r[finite].mean())
+            self.value = m if self.value is None else \
+                (1 - self.alpha) * self.value + self.alpha * m
+        self.history.append(0.0 if self.value is None else self.value)
+        return self.history[-1]

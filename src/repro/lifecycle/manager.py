@@ -86,6 +86,8 @@ class LifecycleRecord:
     full_probe: bool             # a full 20 s probe fired this tick
     refreshed: bool              # the forest was refit+swapped this tick
     spend_usd: float             # cumulative Eq. 1 monitoring dollars
+    skipped: bool = False        # tick skipped (fault-plane outage: the
+    #                              measurement was a frozen fossil)
 
 
 class LifecycleManager:
@@ -155,12 +157,33 @@ class LifecycleManager:
     # ------------------------------------------------------------------
     def tick(self, step: int, ctl: Any, sim: Any, conns: np.ndarray,
              achieved: np.ndarray,
-             monitored: np.ndarray) -> LifecycleRecord:
+             monitored: np.ndarray,
+             measurement_ok: bool = True) -> LifecycleRecord:
         """One lifecycle iteration, called by the scenario engine after
         the step's achieved/monitored BW is known (and before the trace
-        row is cut, so a lifecycle replan lands in that step's row)."""
+        row is cut, so a lifecycle replan lands in that step's row).
+
+        ``measurement_ok=False`` (the fault plane flags a monitor
+        outage: `monitored` is a frozen fossil) skips the tick entirely
+        — learning a residual against stale data would teach the drift
+        detector that the PREDICTOR moved when only the monitor died."""
         N = self.n_dcs
         off = ~np.eye(N, dtype=bool)
+        if not measurement_ok:
+            self.metrics.counter(
+                "ticks_skipped",
+                help="ticks skipped on fault-plane outages").inc()
+            rec = LifecycleRecord(
+                step=int(step),
+                resid_ewma=float(self.stats.value or 0.0),
+                z_max=0.0,
+                consec_max=int(self.detector.consec.max()) if N else 0,
+                suspicious=self.detector.suspicious(),
+                full_probe=False, refreshed=False,
+                spend_usd=float(self.scheduler.spend_usd),
+                skipped=True)
+            self.records.append(rec)
+            return rec
         achieved = np.asarray(achieved, np.float64)
 
         # 1. observe (free): what does the predictor say RIGHT NOW for

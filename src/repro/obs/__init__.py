@@ -12,7 +12,7 @@ from repro.obs.export import (OBS_SCHEMA, check_run, diff_runs,
                               write_json, write_spans_jsonl)
 from repro.obs.registry import (Counter, Gauge, Histogram,
                                 MetricsRegistry, Series)
-from repro.obs.sle import (SLE_BAND, accuracy_sle, capacity_sle,
+from repro.obs.sle import (SLE_BAND, accuracy_sle, capacity_sle, fault_sle,
                            fleet_monitoring_usd, fleet_sle, jain_index,
                            responsiveness_steps, scenario_monitoring_usd,
                            scenario_sle)
@@ -23,7 +23,7 @@ __all__ = [
     "OBS_SCHEMA", "OBS_MODES", "SLE_BAND", "NULL_TRACER",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Series",
     "NullTracer", "SpanTracer", "obs_mode",
-    "accuracy_sle", "capacity_sle", "jain_index",
+    "accuracy_sle", "capacity_sle", "fault_sle", "jain_index",
     "responsiveness_steps", "scenario_monitoring_usd",
     "fleet_monitoring_usd", "scenario_sle", "fleet_sle",
     "export_run", "export_scenario", "to_json", "write_json",

@@ -104,6 +104,25 @@ def responsiveness_steps(event_steps: Sequence[int],
     return float(np.mean(lags)) if lags else None
 
 
+def fault_sle(floor: Sequence[float], fault_steps: Sequence[int],
+              dead_steps: Sequence[int] = (),
+              frac: float = RECOVERY_FRAC) -> Dict[str, Any]:
+    """The fault-plane recovery block (repro.faults.harness): MTTR via
+    the responsiveness SLE (mean steps from each fault injection to
+    the floor recovering to `frac` x its pre-fault median, censored at
+    run end) plus the degraded-mode min-BW floor — the worst per-step
+    floor over the steps where progress was POSSIBLE (`dead_steps`,
+    e.g. a blacked-out ring hop, are excluded: no controller can move
+    bytes over a link that does not exist)."""
+    v = np.asarray(list(floor), np.float64)
+    dead = set(int(d) for d in dead_steps)
+    alive = [float(v[t]) for t in range(len(v)) if t not in dead]
+    return {
+        "mttr_steps": responsiveness_steps(fault_steps, v, frac=frac),
+        "degraded_min_bw": round(min(alive), 6) if alive else 0.0,
+    }
+
+
 # ----------------------------------------------------------------------
 # Eq. 1 monitoring-cost meter
 # ----------------------------------------------------------------------

@@ -32,12 +32,13 @@ import numpy as np
 
 from repro.control import ControllerConfig, WanifyController
 from repro.core.predictor import SnapshotPredictor
+from repro.faults.plane import FaultPlane, faults_mode
 from repro.lifecycle.manager import LifecycleManager, lifecycle_mode
 from repro.obs.spans import NULL_TRACER, SpanTracer, obs_mode
 from repro.scenarios.events import Timed
 from repro.scenarios.trace import (ScenarioResult, ScenarioTrace, StepTrace,
                                    sig_hash)
-from repro.wan.simulator import WanSimulator
+from repro.wan.simulator import WanSimulator, WaterfillDivergence
 
 
 @dataclass
@@ -60,7 +61,8 @@ class ScenarioEngine:
 
     def __init__(self, spec: ScenarioSpec, seed: int = 0,
                  predictor: Any = None, overlay: Optional[str] = None,
-                 lifecycle: Any = None, obs: Optional[str] = None):
+                 lifecycle: Any = None, obs: Optional[str] = None,
+                 faults: Any = None):
         self.spec = spec
         self.seed = int(seed)
         sim_kw = dict(spec.sim_kwargs)
@@ -102,6 +104,33 @@ class ScenarioEngine:
                 self.tracer.watch(self.lifecycle.metrics)
                 self.tracer.watch(self.lifecycle.scheduler.metrics)
             self.controller.tracer = self.tracer
+        # `faults` gates the fault plane (repro.faults): a ready
+        # FaultPlane is used as-is; a mode string / None resolves via
+        # $REPRO_FAULTS. "on" builds a graceful plane (the degradation
+        # ladder). Under "off" a timeline that scripts fault events
+        # still gets a plane — an UNGRACEFUL one (raw injection, no
+        # ladder): the naive-crash ablation the chaos harness compares
+        # against. Off + no fault events = no plane, no fault code,
+        # byte-identical replays.
+        self.faults: Optional[FaultPlane] = None
+        if isinstance(faults, FaultPlane):
+            self.faults = faults
+        else:
+            # imported lazily: faults.events subclasses the event DSL
+            # of this package, so a module-level import would be
+            # circular through repro.scenarios.__init__
+            from repro.faults.events import FaultEvent
+            mode = faults_mode(faults)
+            if mode == "on" or any(isinstance(t.event, FaultEvent)
+                                   for t in spec.events):
+                self.faults = FaultPlane(self.sim.N,
+                                         graceful=(mode == "on"),
+                                         seed=self.seed)
+        if self.faults is not None:
+            self.controller.faults = self.faults
+            if self.tracer is not NULL_TRACER:
+                self.tracer.watch(self.faults.metrics)
+        self._last_achieved: Optional[np.ndarray] = None
         self.step = 0
         # a per-step tap for ride-along harnesses (repro.placement):
         # called as step_hook(engine, step_trace_row) after each step's
@@ -125,6 +154,11 @@ class ScenarioEngine:
         """Resolve a (region, region) pair to simulator indices."""
         a, b = pair
         return self.sim.regions.index(a), self.sim.regions.index(b)
+
+    def dc(self, region: str) -> int:
+        """Resolve one region name to its simulator index (fault
+        events target single DCs, not link pairs)."""
+        return self.sim.regions.index(region)
 
     def start_skew_ramp(self, weights: Sequence[float], over: int) -> None:
         """Begin ramping the skew weights to `weights` over `over`
@@ -185,6 +219,33 @@ class ScenarioEngine:
             if frac >= 1.0:
                 self._skew_ramp = None
 
+    def _recover_divergence(self, k: int,
+                            exc: WaterfillDivergence) -> np.ndarray:
+        """Water-fill divergence at step `k`: graceful mode rolls the
+        controller back to the last-known-good plan (fault-plane rung
+        5) and retries; without a graceful plane the divergence
+        propagates with scenario/step context attached."""
+        fp = self.faults
+        if fp is None or not fp.graceful:
+            raise WaterfillDivergence(
+                f"{exc} (scenario {self.spec.name!r}, step {k})") from exc
+        ctl = self.controller
+        with self.tracer.span("recover"):
+            fp.note_rollback()
+            ctl.rollback_plan(step=k)
+            if not fp.solver_failing(k):
+                # a genuine divergence: the rolled-back plan is known
+                # to have executed — retry the fill on it
+                try:
+                    return self.sim.waterfill(self._full_conns())
+                except WaterfillDivergence:
+                    pass
+            # solver still down (or the retry failed): freeze at the
+            # last achieved surface — degraded, but alive
+            if self._last_achieved is not None:
+                return np.array(self._last_achieved, copy=True)
+            return np.zeros((self.sim.N, self.sim.N))
+
     def run(self) -> ScenarioResult:
         """Drive the timeline to completion and return the trace."""
         ctl, sim, tr = self.controller, self.sim, self.tracer
@@ -194,6 +255,8 @@ class ScenarioEngine:
         ctl.compiled((self.spec.name,), lambda p: p.signature())
         for k in range(self.spec.steps):
             self.step = k
+            if self.faults is not None:
+                self.faults.step = k     # fault windows key on loop time
             with tr.span("events"):
                 applied = tuple(t.event.describe()
                                 for t in self._timeline.get(k, ()))
@@ -205,13 +268,22 @@ class ScenarioEngine:
             with tr.span("waterfill", delta=True):
                 conns = self._full_conns()
                 routing = ctl.current_routing()
-                if routing is None:
-                    achieved = sim.waterfill(conns)
-                else:
-                    # overlay in force: execute the routed lowering —
-                    # the end-to-end credit on a relayed pair is what
-                    # the ring consumer observes
-                    achieved = sim.waterfill_routed(*routing)
+                try:
+                    if self.faults is not None \
+                            and self.faults.solver_failing(k):
+                        raise WaterfillDivergence(
+                            "injected water-fill divergence (SolverFault)")
+                    if routing is None:
+                        achieved = sim.waterfill(conns)
+                    else:
+                        # overlay in force: execute the routed lowering
+                        # — the end-to-end credit on a relayed pair is
+                        # what the ring consumer observes
+                        achieved = sim.waterfill_routed(*routing)
+                except WaterfillDivergence as exc:
+                    achieved = self._recover_divergence(k, exc)
+                    conns = self._full_conns()   # rollback changed them
+            self._last_achieved = achieved
             with tr.span("control", delta=True):
                 dt = self._step_time(achieved)
                 ctl.observe_step_time(dt, step=k)
@@ -223,15 +295,24 @@ class ScenarioEngine:
 
             # sampled at the same matrix as `achieved`, so in a quiet
             # scenario monitored == achieved exactly, replan step or not
+            meas_ok = True
             with tr.span("measure"):
-                monitored = ctl.monitor.measure(conns)
+                if self.faults is not None:
+                    # the fault boundary: a monitor outage serves the
+                    # last pre-outage sample, frozen, with ok=False so
+                    # downstream learners skip the fossil tick
+                    monitored, meas_ok = self.faults.measured(
+                        ctl.monitor, conns)
+                else:
+                    monitored = ctl.monitor.measure(conns)
             if self.lifecycle is not None:
                 # lifecycle tick before the trace row is cut, so a
                 # drift-triggered refresh replan lands in this step's
                 # `replans` (and its prediction in this step's columns)
                 with tr.span("lifecycle", delta=True):
                     self.lifecycle.tick(k, ctl, sim, conns, achieved,
-                                        monitored)
+                                        monitored,
+                                        measurement_ok=meas_ok)
             P = ctl.n_pods
             off = ~np.eye(P, dtype=bool)
             pred = ctl.last_pred[:P, :P]
@@ -267,11 +348,13 @@ def run_scenario(spec: ScenarioSpec, seed: int = 0,
                  predictor: Any = None,
                  overlay: Optional[str] = None,
                  lifecycle: Any = None,
-                 obs: Optional[str] = None) -> ScenarioResult:
+                 obs: Optional[str] = None,
+                 faults: Any = None) -> ScenarioResult:
     """Build a fresh engine and run the scenario to completion
     (`overlay` gates relay routing, `lifecycle` the predictor
-    lifecycle, `obs` span tracing; None defers to $REPRO_OVERLAY /
-    $REPRO_LIFECYCLE / $REPRO_OBS)."""
+    lifecycle, `obs` span tracing, `faults` the fault plane; None
+    defers to $REPRO_OVERLAY / $REPRO_LIFECYCLE / $REPRO_OBS /
+    $REPRO_FAULTS)."""
     return ScenarioEngine(spec, seed=seed, predictor=predictor,
                           overlay=overlay, lifecycle=lifecycle,
-                          obs=obs).run()
+                          obs=obs, faults=faults).run()

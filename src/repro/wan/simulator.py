@@ -112,6 +112,10 @@ class WanSimulator:
         self._fluct = np.zeros((self.N, self.N))   # log-space AR(1) state
         self._link_factor = np.ones((self.N, self.N))  # scripted events
         self.modulation = 1.0                      # scripted diurnal cycle
+        # scripted reachability (repro.faults): None = fully reachable
+        # (the historical path — no mask is ever multiplied in); a bool
+        # [N,N] mask zeroes unreachable links in link_bw_now()
+        self._reachable: Optional[np.ndarray] = None
         # convergence accounting of the most recent / all fills (the
         # historical loop capped silently at 8*N*N; now surfaced) —
         # kept on the obs registry, with `fill_calls` /
@@ -180,6 +184,24 @@ class WanSimulator:
         self.provider_factor = None if pf is None else np.asarray(pf, float)
         self._rebuild_base()
 
+    def set_reachable(self, mask: Optional[np.ndarray]) -> None:
+        """Scripted reachability (repro.faults): `mask` is a bool [N,N]
+        matrix; False pairs (a blacked-out DC, a network partition)
+        carry ZERO bandwidth — not merely low BW, so a dead pair
+        freezes at rate 0 in every fill and a solo measurement of it
+        reads 0. None restores full reachability (and restores the
+        exact historical arithmetic: no mask is multiplied in at all).
+        The diagonal is forced True — a DC always reaches itself."""
+        if mask is None:
+            self._reachable = None
+            return
+        m = np.asarray(mask, bool).copy()
+        if m.shape != (self.N, self.N):
+            raise ValueError(f"reachability mask must be "
+                             f"[{self.N},{self.N}], got {m.shape}")
+        np.fill_diagonal(m, True)
+        self._reachable = m
+
     def set_background(self, i: int, j: int, conns: float) -> None:
         """Cross-traffic on link i->j (0 clears)."""
         if self.background_conns is None:
@@ -215,9 +237,13 @@ class WanSimulator:
 
     def link_bw_now(self) -> np.ndarray:
         """Current single-connection BW per link (fluctuation x scripted
-        link factors x diurnal modulation)."""
-        return self.base * np.exp(self._fluct) * self._link_factor \
+        link factors x diurnal modulation, zeroed on unreachable pairs
+        when a fault-plane reachability mask is installed)."""
+        bw = self.base * np.exp(self._fluct) * self._link_factor \
             * self.modulation
+        if self._reachable is not None:
+            bw = bw * self._reachable
+        return bw
 
     def _caps(self):
         vms = self.vms_per_dc if self.vms_per_dc is not None \

@@ -27,6 +27,30 @@ def make_controller(n_pods=4, seed=3, sim=None, **cfg):
 
 
 # ----------------------------------------------------------------------
+# config validation: bad knobs fail at construction, not ticks later
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kw,msg", [
+    (dict(max_conns=0), "max_conns"),
+    (dict(max_conns=-3), "max_conns"),
+    (dict(replan_every=0), "replan_every"),
+    (dict(straggler_factor=0.0), "straggler_factor"),
+    (dict(straggler_factor=-1.0), "straggler_factor"),
+    (dict(straggler_cooldown=-1), "straggler_cooldown"),
+    (dict(ewma_alpha=0.0), "ewma_alpha"),
+    (dict(ewma_alpha=1.5), "ewma_alpha"),
+])
+def test_config_rejects_bad_knobs(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        ControllerConfig(**kw)
+
+
+def test_config_accepts_boundary_values():
+    cfg = ControllerConfig(max_conns=1, replan_every=1,
+                           straggler_cooldown=0, ewma_alpha=1.0)
+    assert cfg.max_conns == 1 and cfg.ewma_alpha == 1.0
+
+
+# ----------------------------------------------------------------------
 # (a) plan cache: identical signature => no new jit entry
 # ----------------------------------------------------------------------
 def test_plan_cache_no_rebuild_on_identical_signature():

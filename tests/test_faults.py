@@ -1,0 +1,444 @@
+"""Fault plane: gating, injection determinism, the degradation ladder,
+divergence recovery, fleet quarantine, and the chaos harness pins."""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.control import ControllerConfig, WanifyController
+from repro.core.predictor import SnapshotPredictor
+from repro.faults import (FaultConfig, FaultPlane, ProbeTimeout,
+                          ProbeTimeoutError, chaos_schedule, faults_mode)
+from repro.faults.harness import chaos_report, run_chaos
+from repro.faults.scenarios import CHAOS_SCENARIOS, get_chaos_scenario
+from repro.fleet import (BatchedRfPredictor, FleetController, JobSpec,
+                         default_fleet_forest)
+from repro.fleet.arbiter import arbitrate
+from repro.fleet.scenario import FleetEngine, run_fleet_scenario
+from repro.scenarios import ScenarioEngine, get_scenario
+from repro.scenarios.events import at
+from repro.wan.monitor import SnapshotMonitor
+from repro.wan.simulator import WanSimulator, WaterfillDivergence
+
+HERE = os.path.dirname(__file__)
+
+
+# ----------------------------------------------------------------------
+# gating
+# ----------------------------------------------------------------------
+def test_faults_mode_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert faults_mode() == "off"
+    assert faults_mode("on") == "on"
+    monkeypatch.setenv("REPRO_FAULTS", "on")
+    assert faults_mode() == "on"
+    assert faults_mode("off") == "off"       # explicit argument wins
+    with pytest.raises(ValueError, match="unknown faults mode"):
+        faults_mode("chaos")
+
+
+def test_engine_off_without_fault_events_builds_no_plane(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    spec = dataclasses.replace(get_scenario("steady"), steps=2)
+    eng = ScenarioEngine(spec, seed=0)
+    assert eng.faults is None
+    assert eng.controller.faults is None
+
+
+def test_scripted_fault_events_build_the_naive_plane(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    eng = ScenarioEngine(get_chaos_scenario("solver_flake").spec, seed=0)
+    assert eng.faults is not None and not eng.faults.graceful
+
+
+def test_faults_on_builds_the_graceful_plane():
+    spec = dataclasses.replace(get_scenario("steady"), steps=2)
+    eng = ScenarioEngine(spec, seed=0, faults="on")
+    assert eng.faults is not None and eng.faults.graceful
+    assert eng.controller.faults is eng.faults
+    eng.run()                                # clean timeline still runs
+
+
+# ----------------------------------------------------------------------
+# tentpole acceptance: every historical golden replays byte-identical
+# with REPRO_FAULTS=off — parametrized per pin
+# ----------------------------------------------------------------------
+def _golden_hashes():
+    with open(os.path.join(HERE, "data", "trace_golden.json")) as f:
+        return json.load(f)["hashes"]
+
+
+GOLDEN = _golden_hashes()
+
+
+def _goldens_module():
+    path = os.path.join(HERE, os.pardir, "tools", "gen_trace_goldens.py")
+    spec = importlib.util.spec_from_file_location("gen_trace_goldens", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def collected_hashes():
+    """Run the golden collector ONCE with faults explicitly gated off;
+    each parametrized pin then compares its own key."""
+    mod = _goldens_module()
+    old = os.environ.get("REPRO_FAULTS")
+    os.environ["REPRO_FAULTS"] = "off"
+    try:
+        return mod.collect()
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_FAULTS", None)
+        else:                                       # pragma: no cover
+            os.environ["REPRO_FAULTS"] = old
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_golden_pin_faults_off(key, collected_hashes):
+    """With faults off, trace `key` is byte-identical to the sha256
+    pinned before this subsystem existed."""
+    assert key in collected_hashes, f"collector no longer produces {key}"
+    assert collected_hashes[key] == GOLDEN[key]
+
+
+def test_gen_goldens_only_filter():
+    """--only regenerates a matching subset and errors on no match."""
+    mod = _goldens_module()
+    sub = mod.collect(only="fleet_steady")
+    assert set(sub) == {"fleet/fleet_steady/seed3"}
+    assert sub["fleet/fleet_steady/seed3"] == \
+        GOLDEN["fleet/fleet_steady/seed3"]
+    with pytest.raises(SystemExit, match="matches no pin key"):
+        mod.collect(only="no_such_scenario")
+
+
+# ----------------------------------------------------------------------
+# reachability surface
+# ----------------------------------------------------------------------
+def test_set_reachable_zeroes_dead_pairs():
+    sim = WanSimulator(seed=0, fluct_sigma=0.0)
+    base = sim.link_bw_now().copy()
+    mask = np.ones((sim.N, sim.N), bool)
+    mask[2, :] = mask[:, 2] = False
+    sim.set_reachable(mask)
+    bw = sim.link_bw_now()
+    assert bw[2, 3] == 0.0 and bw[0, 2] == 0.0
+    assert bw[0, 1] == base[0, 1]            # live pairs untouched
+    sim.set_reachable(None)
+    assert np.array_equal(sim.link_bw_now(), base)
+    with pytest.raises(ValueError, match="reachability mask"):
+        sim.set_reachable(np.ones((2, 2), bool))
+
+
+def test_plane_reachability_composition():
+    p = FaultPlane(6, graceful=True)
+    assert p.reachable_mask() is None        # clean = the no-mask path
+    p.blackout(1)
+    p.set_partition([[0, 2], [3, 4]])
+    m = p.reachable_mask()
+    assert not m[1, 0] and not m[0, 1]       # blackout kills DC 1
+    assert not m[0, 3] and not m[2, 4]       # cross-group partitioned
+    assert m[0, 2] and m[3, 4] and m[5, 0]   # in-group / unnamed live
+    p.heal_partition()
+    m2 = p.reachable_mask()
+    assert m2[0, 3] and not m2[1, 0]         # blackout survives heal
+    p.restore(1)
+    assert p.reachable_mask() is None
+
+
+# ----------------------------------------------------------------------
+# the degradation ladder
+# ----------------------------------------------------------------------
+def _quiet_monitor(seed=0):
+    sim = WanSimulator(seed=seed, fluct_sigma=0.0, snapshot_sigma=0.0,
+                       runtime_sigma=0.0)
+    return sim, SnapshotMonitor(sim)
+
+
+def test_probe_timeout_naive_raises_graceful_degrades():
+    sim, mon = _quiet_monitor()
+    conns = np.ones((sim.N, sim.N))
+    naive = FaultPlane(sim.N, graceful=False)
+    naive.probe_fault("timeout", 5)
+    with pytest.raises(ProbeTimeoutError, match="timed out at step 0"):
+        naive.captured(mon, conns)
+
+    plane = FaultPlane(sim.N, graceful=True)
+    raw0, ov0 = plane.captured(mon, conns)   # clean: remembered
+    assert ov0 is None
+    plane.step = 3
+    plane.probe_fault("timeout", 5)
+    raw, ov = plane.captured(mon, conns)
+    assert ov is None                        # within bounded staleness
+    age = 3
+    disc = plane.cfg.stale_discount ** age
+    assert np.allclose(raw["snapshot_bw"], raw0["snapshot_bw"] * disc)
+    assert plane.metrics.counters()["probe_retries"] == \
+        plane.cfg.probe_retries
+    assert plane.retry_usd > 0.0             # Eq. 1-priced backoff
+
+
+def test_staleness_bottoms_out_at_the_snapshot_rung():
+    sim, mon = _quiet_monitor()
+    conns = np.ones((sim.N, sim.N))
+    plane = FaultPlane(sim.N, graceful=True,
+                       cfg=FaultConfig(max_stale_steps=2))
+    plane.captured(mon, conns)
+    plane.step = 5                           # age 5 > max_stale_steps 2
+    plane.monitor_outage(10)
+    raw, override = plane.captured(mon, conns)
+    assert override is not None              # RF bypassed entirely
+    off = ~np.eye(sim.N, dtype=bool)
+    assert np.all(override[off] >= 1.0)      # snapshot clamp floor
+    assert np.allclose(override[off],
+                       np.maximum(raw["snapshot_bw"], 1.0)[off])
+    assert plane.metrics.counters()["snapshot_fallbacks"] == 1
+
+
+def test_probe_loss_naive_holes_graceful_backfills():
+    sim, mon = _quiet_monitor()
+    conns = np.ones((sim.N, sim.N))
+    naive = FaultPlane(sim.N, graceful=False)
+    naive.probe_fault("loss", 5, frac=0.5)
+    raw, _ = naive.captured(mon, conns)
+    assert np.isnan(raw["snapshot_bw"]).any()    # holes flow downstream
+
+    plane = FaultPlane(sim.N, graceful=True)
+    plane.captured(mon, conns)
+    plane.step = 1
+    plane.probe_fault("loss", 5, frac=0.9)
+    raw2, _ = plane.captured(mon, conns)
+    assert np.isfinite(raw2["snapshot_bw"]).all()
+
+
+def test_monitor_outage_freezes_measurement_and_flags_it():
+    sim, mon = _quiet_monitor()
+    conns = np.ones((sim.N, sim.N))
+    plane = FaultPlane(sim.N, graceful=True)
+    m0, ok0 = plane.measured(mon, conns)
+    assert ok0
+    plane.step = 1
+    plane.monitor_outage(4)
+    sim.advance()
+    m1, ok1 = plane.measured(mon, conns)
+    assert not ok1 and np.array_equal(m1, m0)    # frozen fossil
+    assert plane.metrics.counters()["outage_ticks"] == 1
+
+
+def test_predictor_fault_injects_and_ladder_sanitizes():
+    sim, _ = _quiet_monitor()
+    snap = sim.measure_snapshot(np.ones((sim.N, sim.N)))
+    pred = snap * 1.1
+    naive = FaultPlane(sim.N, graceful=False)
+    naive.predictor_fault(3, kind="nan", rows=2)
+    out = naive.predicted(pred, snap)
+    assert np.isnan(out).any()                   # raw injection
+
+    plane = FaultPlane(sim.N, graceful=True)
+    plane.predictor_fault(3, kind="nan", rows=2)
+    out2 = plane.predicted(pred, snap)
+    assert np.isfinite(out2).all()
+    assert plane.metrics.counters()["rows_quarantined"] >= 1
+
+
+def test_sanitize_matrix_quarantines_nan_negative_outlier():
+    plane = FaultPlane(4, graceful=True,
+                       cfg=FaultConfig(outlier_factor=4.0))
+    snap = np.full((4, 4), 100.0)
+    pred = snap.copy()
+    pred[0, 1] = np.nan
+    pred[1, 2] = -5.0
+    pred[2, 3] = 1e6                             # > 4x reference
+    out = plane.sanitize_matrix(pred, snap)
+    assert out[0, 1] == 100.0 and out[1, 2] == 100.0 and out[2, 3] == 100.0
+    assert out[3, 0] == pred[3, 0]               # healthy entries kept
+
+
+def test_chaos_schedule_is_deterministic_per_seed():
+    a = chaos_schedule(7, 40, regions=["ap-se2"])
+    b = chaos_schedule(7, 40, regions=["ap-se2"])
+    assert [(t.step, t.event) for t in a] == [(t.step, t.event) for t in b]
+    c = chaos_schedule(8, 40, regions=["ap-se2"])
+    assert [(t.step, t.event) for t in a] != [(t.step, t.event) for t in c]
+    assert all(t.step < 40 for t in a)
+
+
+# ----------------------------------------------------------------------
+# controller rollback (ladder rung 5)
+# ----------------------------------------------------------------------
+def test_rollback_restores_last_known_good_plan():
+    sim = WanSimulator(seed=3, fluct_sigma=0.1)
+    ctl = WanifyController(sim, SnapshotPredictor(), n_pods=4,
+                           cfg=ControllerConfig(advance_sim=False))
+    assert ctl.rollback_plan() is None           # nothing to restore yet
+    first = ctl.plan
+    for _ in range(6):                           # drift until a new sig
+        sim.advance()
+        ctl.replan(reason="explicit")
+        if ctl.plan.signature() != first.signature():
+            break
+    prev = ctl._prev_plan
+    assert prev is not None
+    restored = ctl.rollback_plan(step=9)
+    assert restored is prev and ctl.plan is prev
+    conns = ctl.current_conns()
+    for i in range(4):
+        assert tuple(int(v) for v in conns[i, :4]) == prev.conns[i]
+    assert ctl.record[-1]["reason"] == "rollback"
+    assert ctl.record[-1]["step"] == 9
+
+
+# ----------------------------------------------------------------------
+# satellite: WaterfillDivergence surfaces with step/tick context
+# ----------------------------------------------------------------------
+def test_engine_divergence_carries_scenario_and_step(monkeypatch):
+    spec = dataclasses.replace(get_scenario("steady"), steps=3)
+    eng = ScenarioEngine(spec, seed=0)
+
+    def boom(*a, **k):
+        raise WaterfillDivergence("synthetic non-convergence")
+    monkeypatch.setattr(eng.sim, "waterfill", boom)
+    with pytest.raises(WaterfillDivergence,
+                       match=r"scenario 'steady', step 0"):
+        eng.run()
+
+
+def test_fleet_tick_divergence_carries_tick_context(monkeypatch):
+    sim = WanSimulator(seed=0, fluct_sigma=0.0)
+    fleet = FleetController(
+        sim, BatchedRfPredictor(default_fleet_forest()),
+        jobs=(JobSpec("a", dcs=(0, 1)), JobSpec("b", dcs=(2, 3))))
+
+    def boom(*a, **k):
+        raise WaterfillDivergence("synthetic non-convergence")
+    monkeypatch.setattr(sim, "waterfill_tenants", boom)
+    with pytest.raises(WaterfillDivergence, match=r"fleet tick 1"):
+        fleet.tick()
+
+
+def test_fused_divergence_names_the_offending_tick():
+    sim = WanSimulator(seed=0, fluct_sigma=0.0, snapshot_sigma=0.0,
+                       host_sigma=0.0)
+    fleet = FleetController(
+        sim, BatchedRfPredictor(default_fleet_forest()),
+        jobs=(JobSpec("a", dcs=(0, 1, 2, 3)),
+              JobSpec("b", dcs=(4, 5, 6, 7))))
+    ff = fleet.fused()
+    fake = {"converged": np.array([True, False, True])}
+    ff._scan_fn = lambda detail: (
+        lambda carry, s, b: ((carry[0], carry[1]), fake))
+    with pytest.raises(WaterfillDivergence, match=r"tick 2 of 3"):
+        ff.run(3)
+
+
+def test_solver_fault_recovers_via_rollback():
+    res = run_chaos("solver_flake", graceful=True)
+    assert not res["crashed"]
+    assert res["rollbacks"] >= 1
+    assert res["degraded_min_bw"] > 0.0
+
+
+# ----------------------------------------------------------------------
+# fleet quarantine
+# ----------------------------------------------------------------------
+def test_arbitrate_quarantines_dead_dc():
+    cap = np.full((4, 4), 100.0)
+    jobs = [("a", (0, 1, 2), 1.0), ("b", (0, 1, 3), 1.0)]
+    base = arbitrate(jobs, 4, 8, cap)
+    mask = np.ones((4, 4), bool)
+    mask[3, :] = mask[:, 3] = False              # DC 3 dead
+    np.fill_diagonal(mask, True)
+    quar = arbitrate(jobs, 4, 8, cap, reachable=mask)
+    # job b spans the dead DC: its dead pairs are capped to ZERO,
+    # including sole-tenant pairs link_shares leaves uncapped
+    assert quar["b"].link_cap[1, 3] == 0.0
+    assert quar["b"].link_cap[3, 0] == 0.0
+    # live contended pairs keep their fair-share caps
+    assert quar["b"].link_cap[0, 1] == base["b"].link_cap[0, 1]
+    # job a never touched DC 3: fully unchanged
+    assert quar["a"].max_conns == base["a"].max_conns
+    assert np.array_equal(quar["a"].link_cap, base["a"].link_cap)
+
+
+def test_fleet_blackout_untouched_job_keeps_integer_series():
+    """The fleet_blackout chaos run vs the same spec with no faults:
+    the batch job (disjoint from the dead DC) keeps its budget and
+    connection-count series tick for tick."""
+    chaos = get_chaos_scenario("fleet_blackout")
+    faulted = run_fleet_scenario(chaos.spec, seed=3, faults="on")
+    clean_spec = dataclasses.replace(chaos.spec, events=())
+    clean = run_fleet_scenario(clean_spec, seed=3)
+
+    def series(res, job, key):
+        return [next(r[key] for r in s.jobs if r["name"] == job)
+                for s in res.trace.steps]
+    assert series(faulted, "batch", "budget") == \
+        series(clean, "batch", "budget")
+    assert series(faulted, "batch", "conns_total") == \
+        series(clean, "batch", "conns_total")
+    # while the touched job's envelope visibly shrank during blackout
+    dead = [series(faulted, "serving", "cap_min")[t]
+            for t in chaos.dead_steps]
+    assert min(dead) == 0.0
+
+
+def test_fleet_rejects_control_plane_fault_events():
+    chaos = get_chaos_scenario("fleet_blackout")
+    bad = dataclasses.replace(
+        chaos.spec, events=chaos.spec.events + (at(2, ProbeTimeout(3)),))
+    with pytest.raises(ValueError, match="single-job-engine"):
+        FleetEngine(bad, seed=0)
+
+
+# ----------------------------------------------------------------------
+# lifecycle integration: outage ticks are skipped, not learned
+# ----------------------------------------------------------------------
+def test_monitor_outage_skips_lifecycle_ticks():
+    from repro.lifecycle.manager import LifecycleManager
+    spec = get_chaos_scenario("monitor_freeze").spec
+    pred = SnapshotPredictor()
+    mgr = LifecycleManager(pred, 8, active=False)
+    eng = ScenarioEngine(spec, seed=3, predictor=pred, lifecycle=mgr,
+                         faults="on")
+    eng.run()
+    skipped = [r.step for r in mgr.records if r.skipped]
+    assert skipped                               # the outage window
+    assert all(8 <= s < 20 for s in skipped)
+    # skipped ticks never advanced the drift detector
+    live = [r for r in mgr.records if not r.skipped]
+    assert mgr.detector.ticks == len(live)
+
+
+# ----------------------------------------------------------------------
+# the chaos harness: headline pins (the BENCH_faults CI contract)
+# ----------------------------------------------------------------------
+def test_every_chaos_scenario_survives_the_ladder():
+    for name in CHAOS_SCENARIOS:
+        res = run_chaos(name, graceful=True)
+        assert not res["crashed"], f"{name}: {res['error']}"
+        assert res["steps_completed"] == res["steps_total"]
+        assert res["degraded_min_bw"] > 0.0
+
+
+def test_naive_ablation_crashes_where_scripted():
+    for name, build in CHAOS_SCENARIOS.items():
+        chaos = build()
+        res = run_chaos(name, graceful=False)
+        if chaos.naive_crashes:
+            assert res["crashed"], f"{name} should die naively"
+            assert res["steps_completed"] < res["steps_total"]
+            assert res["degraded_min_bw"] == 0.0
+
+
+def test_chaos_report_summary_beats_the_ablation():
+    rep = chaos_report(names=["solver_flake", "dc_blackout"], seed=3)
+    s = rep["summary"]
+    assert s["ladder_crashes"] == 0
+    assert s["naive_crashes"] == 2
+    assert s["ladder_mean_mttr"] < s["naive_mean_mttr"]
+    assert s["ladder_min_floor"] > 0.0 and s["naive_min_floor"] == 0.0

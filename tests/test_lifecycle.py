@@ -28,7 +28,8 @@ from repro.core.forest import RandomForest
 from repro.lifecycle import (DriftConfig, EwmaDriftDetector,
                              LifecycleConfig, LifecycleManager,
                              ProbeConfig, ProbeScheduler, RefreshConfig,
-                             SlidingWindow, WindowedPercentileEstimator,
+                             ResidualStats, SlidingWindow,
+                             WindowedPercentileEstimator,
                              baseline_probe_spend, decay_seed_data,
                              lifecycle_mode, pretrain_predictor,
                              refresh_forest, run_lifecycle_comparison)
@@ -220,6 +221,55 @@ def test_detector_reset_forgets_everything():
     assert not det.suspicious()
     assert det.ticks == 0
     assert _feed(det, [0.0] * 50) == []
+
+
+def test_detector_nan_residual_skipped_and_counted():
+    """A poisoned residual (NaN/inf — a lost probe, a dead link's 0/0)
+    must never touch the EWMA baselines: skip-and-count, no alarm, no
+    permanent mean/var corruption."""
+    det = EwmaDriftDetector((), DriftConfig(warmup=5))
+    for _ in range(20):
+        det.update(np.asarray(0.1))
+    mean_before, var_before = float(det.mean), float(det.var)
+    assert det.update(np.asarray(np.nan)) is None
+    assert det.update(np.asarray(np.inf)) is None
+    assert det.nan_skipped == 2
+    assert float(det.mean) == mean_before           # baseline untouched
+    assert float(det.var) == var_before
+    assert np.isfinite(det.mean).all() and np.isfinite(det.var).all()
+    assert not det.suspicious()                     # poisoned != drift
+    # detection still works after the poisoned ticks
+    alarms = _feed(det, [3.0] * 10)
+    assert alarms and alarms[0] == det.cfg.k_consecutive - 1
+
+
+def test_detector_nan_during_warmup_and_matrix_partial():
+    """NaN in the very first / warmup samples must not seed a NaN
+    baseline; in a matrix, only the poisoned entries are skipped."""
+    det = EwmaDriftDetector((2, 2), DriftConfig(warmup=3))
+    r0 = np.array([[0.0, np.nan], [0.2, 0.0]])
+    det.update(r0)                                  # seeding sample
+    assert np.isfinite(det.mean).all()
+    assert det.nan_skipped == 1
+    for _ in range(30):
+        sig = det.update(np.array([[0.0, 0.1], [0.2, np.inf]]))
+        assert sig is None
+    assert np.isfinite(det.mean).all() and np.isfinite(det.var).all()
+    assert det.nan_skipped == 31
+
+
+def test_residual_stats_excludes_nonfinite():
+    """The accuracy EWMA averages only finite entries; an all-poisoned
+    tick repeats the previous value (history still appended)."""
+    stats = ResidualStats(alpha=0.5)
+    stats.update(np.array([0.2, 0.4]))
+    assert stats.value == pytest.approx(0.3)
+    stats.update(np.array([np.nan, 0.1]))           # finite-only mean
+    assert stats.value == pytest.approx(0.5 * 0.3 + 0.5 * 0.1)
+    held = stats.value
+    stats.update(np.array([np.nan, np.inf]))        # all poisoned
+    assert stats.value == pytest.approx(held)
+    assert len(stats.history) == 3
 
 
 # ----------------------------------------------------------------------

@@ -3,16 +3,24 @@ scenario / fleet / placement trace on the DEFAULT (numpy) backend.
 
 Run from the repo root:
 
-    PYTHONPATH=src python tools/gen_trace_goldens.py
+    PYTHONPATH=src python tools/gen_trace_goldens.py [--only SUBSTR]
 
 The pins freeze the canonical `to_json()` bytes of the traces the
 replay tests exercise, so a refactor of the water-fill / optimizer hot
 path (PR 6's fused tick) can prove the default path is byte-identical
 PRE-vs-POST, not merely self-consistent run-to-run. Only regenerate
 when a trace change is intentional and reviewed.
+
+``--only SUBSTR`` regenerates just the pins whose key contains SUBSTR
+(e.g. ``--only fleet_churn`` or ``--only placement/``), merging them
+into the existing golden file — adding one scenario no longer pays the
+full-library regen. Matching is by key substring AFTER the runs are
+enumerated, so an `--only` that matches nothing fails loudly instead
+of silently writing an unchanged file.
 """
 from __future__ import annotations
 
+import argparse
 import hashlib
 import json
 import os
@@ -23,45 +31,71 @@ def _sha(text: str) -> str:
     return hashlib.sha256(text.encode()).hexdigest()
 
 
-def collect() -> dict:
-    """Run every pinned trace and return {key: sha256-of-json}."""
+def _runners() -> dict:
+    """{pin key: zero-arg runner returning the trace json} for every
+    pinned trace (lazy: nothing runs until the runner is called)."""
     from repro.fleet.scenario import fleet_scenario_names, \
         get_fleet_scenario, run_fleet_scenario
     from repro.placement import run_placement_scenario, scan_agg, \
         two_stage_join
     from repro.scenarios import get_scenario, run_scenario, scenario_names
 
-    out = {}
+    runners = {}
     for name in scenario_names():
-        res = run_scenario(get_scenario(name), seed=3)
-        out[f"scenario/{name}/seed3"] = _sha(res.trace.to_json())
+        runners[f"scenario/{name}/seed3"] = (
+            lambda n=name: run_scenario(get_scenario(n),
+                                        seed=3).trace.to_json())
     for name in fleet_scenario_names():
-        res = run_fleet_scenario(get_fleet_scenario(name), seed=3)
-        out[f"fleet/{name}/seed3"] = _sha(res.trace.to_json())
+        runners[f"fleet/{name}/seed3"] = (
+            lambda n=name: run_fleet_scenario(get_fleet_scenario(n),
+                                              seed=3).trace.to_json())
     for backend in ("wanify", "static"):
-        res = run_placement_scenario("skew_ramp", query=two_stage_join(4),
-                                     seed=3, backend=backend)
-        out[f"placement/skew_ramp/{backend}/seed3"] = \
-            _sha(res.trace.to_json())
-    res = run_placement_scenario("runtime_fluctuation", query=scan_agg(4),
-                                 seed=5)
-    out["placement/runtime_fluctuation/wanify/seed5"] = \
-        _sha(res.trace.to_json())
-    return out
+        runners[f"placement/skew_ramp/{backend}/seed3"] = (
+            lambda b=backend: run_placement_scenario(
+                "skew_ramp", query=two_stage_join(4), seed=3,
+                backend=b).trace.to_json())
+    runners["placement/runtime_fluctuation/wanify/seed5"] = (
+        lambda: run_placement_scenario(
+            "runtime_fluctuation", query=scan_agg(4),
+            seed=5).trace.to_json())
+    return runners
+
+
+def collect(only: str | None = None) -> dict:
+    """Run the pinned traces and return {key: sha256-of-json};
+    `only` filters keys by substring (error when nothing matches)."""
+    runners = _runners()
+    if only is not None:
+        runners = {k: v for k, v in runners.items() if only in k}
+        if not runners:
+            raise SystemExit(f"--only {only!r} matches no pin key")
+    return {k: _sha(run()) for k, run in runners.items()}
 
 
 def main() -> None:
-    """Write the golden document next to the test data."""
-    path = os.path.join(os.path.dirname(__file__), os.pardir,
-                        "tests", "data", "trace_golden.json")
+    """Write (or merge into) the golden document next to the test data."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", type=str, default=None, metavar="SUBSTR",
+                    help="regenerate only pins whose key contains "
+                         "SUBSTR, merged into the existing file")
+    args = ap.parse_args()
+    path = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), os.pardir,
+                     "tests", "data", "trace_golden.json"))
+    hashes = {}
+    if args.only is not None and os.path.exists(path):
+        with open(path) as f:
+            hashes = json.load(f)["hashes"]
+    fresh = collect(only=args.only)
+    hashes.update(fresh)
     doc = {"comment": "sha256 of trace.to_json() per named run; "
                       "regenerate via tools/gen_trace_goldens.py",
-           "hashes": collect()}
-    with open(os.path.abspath(path), "w") as f:
+           "hashes": hashes}
+    with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
-    sys.stderr.write(f"wrote {os.path.abspath(path)} "
-                     f"({len(doc['hashes'])} pins)\n")
+    sys.stderr.write(f"wrote {path} ({len(fresh)} regenerated, "
+                     f"{len(hashes)} pins total)\n")
 
 
 if __name__ == "__main__":
